@@ -1,0 +1,50 @@
+"""Embedding-tiering benchmark: zipfian token traffic through a
+TieredEmbedding — how small an HBM-resident hot replica covers how much
+of the lookup volume (the paper's hot/cold-region split applied to
+vocab rows), and the cold-hit (promotion) rate the MIAD loop would see.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timed
+from repro.models import embedding as emb
+
+
+def main(smoke: bool = False):
+    vocab, d = (8192, 64) if smoke else (32768, 128)
+    rng = np.random.default_rng(0)
+    table = jnp.asarray(rng.normal(size=(vocab, d)).astype(np.float32))
+
+    # zipfian token stream with scattered ids (data/lm.py semantics)
+    w = 1.0 / np.power(np.arange(1, vocab + 1, dtype=np.float64), 1.1)
+    cdf = np.cumsum(w) / np.sum(w)
+    scramble = rng.permutation(vocab)
+
+    def batch(k=8192):
+        return jnp.asarray(
+            scramble[np.searchsorted(cdf, rng.random(k))], jnp.int32)
+
+    for hot_frac in (0.01, 0.05, 0.25):
+        hot_rows = max(int(vocab * hot_frac), 1)
+        cfg = emb.TieredEmbeddingConfig(vocab_size=vocab, d_model=d,
+                                        hot_rows=hot_rows)
+        s = emb.init(cfg, table)
+        # warm the counts, re-elect, then measure steady-state cold rate
+        for _ in range(4):
+            _, s = emb.lookup(cfg, s, batch())
+            s, rep = emb.collect(cfg, s)
+        _, s = emb.lookup(cfg, s, batch())
+        cold = float(s["win_cold_hits"]) / max(float(s["win_lookups"]), 1)
+        us = timed(lambda: emb.lookup(cfg, s, batch())[0])
+        hbm = emb.hbm_bytes(cfg, jnp.float32)
+        total = emb.total_bytes(cfg, jnp.float32)
+        emit(f"embedding_hot{int(hot_frac*100)}pct", us,
+             f"cold_hit_rate={cold:.3f};hbm_frac={hbm/total:.3f};"
+             f"coverage={float(rep['hot_coverage']):.3f}")
+
+
+if __name__ == "__main__":
+    main()

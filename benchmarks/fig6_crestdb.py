@@ -1,0 +1,61 @@
+"""Fig. 6 (a, b, c) — CrestKV x YCSB A/B/C: page-utilization improvement,
+memory reduction, and performance overhead, baseline vs HADES.
+
+Paper claims being validated:
+  (a) page utilization improves ~2x (A), ~3x (B), ~4x/80% (C);
+  (b) memory usage drops up to 70%;
+  (c) overhead ~2.5% throughput / ~5% latency, varying by structure.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from benchmarks.common import N_KEYS, N_OPS, WINDOW, emit, run_crest, steady
+
+STRUCTURES_6AB = ("hash-pugh",)            # fig 6a/b uses one structure/run
+WORKLOADS = ("A", "B", "C")
+
+
+def run_pair(structure: str, workload: str, *, n_keys: int, n_ops: int,
+             window: int) -> Dict:
+    _, base, wall_b = run_crest(structure, workload, backend="null",
+                                enabled=False, n_keys=n_keys, n_ops=n_ops,
+                                window=window)
+    _, hades, wall_h = run_crest(structure, workload, backend="proactive",
+                                 enabled=True, n_keys=n_keys, n_ops=n_ops,
+                                 window=window)
+    pu_b = steady(base.windows, "page_utilization")
+    pu_h = steady(hades.windows, "page_utilization")
+    rss_b = steady(base.windows, "rss_bytes")
+    rss_h = steady(hades.windows, "rss_bytes")
+    return {
+        "structure": structure, "workload": workload,
+        "pu_base": pu_b, "pu_hades": pu_h, "pu_gain": pu_h / pu_b,
+        "rss_base": rss_b, "rss_hades": rss_h,
+        "mem_reduction": 1 - rss_h / rss_b,
+        "overhead": hades.overhead_frac,
+        "latency_increase": hades.mean_latency_ns / base.mean_latency_ns - 1,
+        "faults": hades.faults,
+        "wall_us_per_op": wall_h * 1e6 / max(hades.ops, 1),
+    }
+
+
+def main(smoke: bool = False):
+    n_keys = 40_000 if smoke else N_KEYS
+    n_ops = n_keys * 60
+    window = n_keys * 3
+    out: List[Dict] = []
+    for wl in WORKLOADS:
+        for s in STRUCTURES_6AB:
+            r = run_pair(s, wl, n_keys=n_keys, n_ops=n_ops, window=window)
+            out.append(r)
+            emit(f"fig6_{s}_{wl}", r["wall_us_per_op"],
+                 f"pu={r['pu_base']:.2f}->{r['pu_hades']:.2f}"
+                 f"({r['pu_gain']:.1f}x);mem_red={r['mem_reduction']:.2f};"
+                 f"ovh={r['overhead']*100:.1f}%;"
+                 f"lat=+{r['latency_increase']*100:.1f}%")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""§Roofline harness: renders the per-cell roofline table from the
+dry-run artifacts (launch/roofline.py does the math)."""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.launch import roofline
+
+
+def main(smoke: bool = False):
+    rows = roofline.load_all("experiments/dryrun", "pod256")
+    if not rows:
+        emit("roofline", 0.0, "no dry-run artifacts; run "
+             "python -m repro.launch.dryrun --all --both-meshes")
+        return []
+    for r in rows:
+        emit(f"roofline_{r['arch']}_{r['shape']}",
+             max(r["compute_s"], r["memory_s"], r["collective_s"]) * 1e6,
+             f"dom={r['dominant']};frac={r['roofline_frac']:.3f};"
+             f"useful={r['useful_ratio']:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Quickstart: tidy up an address space in ~40 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Allocates 512 objects, hammers a scattered hot subset, and watches the
+HADES frontend reorganize the heap: page utilization climbs, the cold
+superblocks leave HBM, and reads still return the right bytes.
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import Hades, HadesOptions, make_config
+from repro.core.backend import BackendConfig
+
+# a pool of 512 objects x 32 floats, superblock = 16 slots
+cfg = make_config(max_objects=512, slot_words=32, sb_slots=16,
+                  page_slots=4, slack=2.0)
+h = Hades(cfg, HadesOptions(collect_every=4,
+                            backend=BackendConfig(kind="proactive")))
+
+ids = np.arange(512)
+vals = jnp.arange(512 * 32, dtype=jnp.float32).reshape(512, 32)
+h.alloc(ids, vals)
+h.end_load_phase()                       # load stores != workload accesses
+print(f"allocated: {h.heap_histogram()}  rss={h.rss_bytes()//1024} KiB")
+
+rng = np.random.default_rng(0)
+hot = rng.permutation(512)[:48]          # scattered hot set
+for step in range(96):
+    got = h.read(hot[rng.integers(0, 48, size=16)])
+
+print(f"after tidying: {h.heap_histogram()}")
+print(f"rss={h.rss_bytes()//1024} KiB  host={h.host_bytes()//1024} KiB  "
+      f"page_util={h.page_utilization():.2f}")
+print(f"counters: {h.counters()}")
+
+# correctness: every object still reads back its exact bytes
+all_back = h.read(ids)
+assert np.allclose(np.asarray(all_back), np.asarray(vals))
+print("content preserved after", h.counters()["moves"], "migrations ✓")

@@ -1,0 +1,62 @@
+"""End-to-end training driver: a ~100M-param GLM-family model trained
+for a few hundred steps with the full production stack — deterministic
+zipfian data, AdamW + cosine schedule, async atomic checkpointing,
+straggler monitoring, preemption-safe shutdown.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 200]
+
+(Same loop `python -m repro.launch.train --arch <id>` runs on a real
+pod; this example sizes the model to CPU.)
+"""
+import argparse
+import dataclasses
+
+import jax
+
+from repro.configs import get_config
+from repro.data.lm import DataConfig
+from repro.models.model import Model
+from repro.optim.adamw import AdamWConfig
+from repro.runtime.trainer import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    # ~100M params: glm4 family scaled to 12L x 768
+    cfg = dataclasses.replace(
+        get_config("glm4-9b"),
+        num_layers=12, d_model=768, num_heads=12, num_kv_heads=2,
+        d_ff=2048, vocab_size=32768, head_dim=64)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    print(f"model: {cfg.name} scaled -> {n_params/1e6:.1f}M params")
+
+    data = DataConfig(vocab_size=cfg.vocab_size, seq_len=256,
+                      global_batch=8)
+    opt = AdamWConfig(lr=6e-4, total_steps=args.steps,
+                      warmup_steps=max(args.steps // 10, 10))
+    run = TrainerConfig(ckpt_dir=args.ckpt_dir, ckpt_every=50,
+                        log_every=10)
+    trainer = Trainer(model, data, opt, run)
+    trainer.install_signal_handlers()
+
+    def log(step, m):
+        print(f"step {step:4d}  loss {m['loss']:.4f}  lr {m['lr']:.2e}  "
+              f"{m['step_time_s']*1e3:.0f} ms")
+
+    out = trainer.run(params, args.steps, on_metrics=log)
+    first = out["history"][0][1]["loss"]
+    last = out["history"][-1][1]["loss"]
+    print(f"\nloss {first:.3f} -> {last:.3f} over {out['step']} steps; "
+          f"stragglers flagged: {len(out['stragglers'])}; "
+          f"checkpoints in {args.ckpt_dir}")
+    assert last < first, "loss did not decrease"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from repro.checkpoint.ckpt import (Checkpointer, latest_step,  # noqa: F401
+                                   restore, save)

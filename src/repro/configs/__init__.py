@@ -1,0 +1,18 @@
+"""Architecture configs. Importing this package populates the registry."""
+from repro.configs.base import (REGISTRY, ModelConfig, HadesConfig,
+                                get_config, list_archs)  # noqa: F401
+from repro.configs import shapes  # noqa: F401
+
+# registration side effects
+from repro.configs import (  # noqa: F401
+    mixtral_8x7b,
+    olmoe_1b_7b,
+    seamless_m4t_large_v2,
+    qwen2_vl_72b,
+    glm4_9b,
+    granite_20b,
+    granite_34b,
+    chatglm3_6b,
+    zamba2_2_7b,
+    falcon_mamba_7b,
+)

@@ -1,0 +1,16 @@
+"""HADES core — the paper's contribution as a composable JAX module.
+
+  object_table  tagged-pointer analog: packed per-object metadata words
+  pool          fixed-size-object heap (NEW/HOT/COLD regions, superblocks,
+                HBM/host tiers, fault accounting) — jit/pjit native
+  collector     Object Collector: scan, CIW, lock-free migration, compaction
+  policy        MIAD feedback on the promotion rate
+  backend       page-level reclamation backends (reactive/proactive/cap/null)
+  page_util     the Page Utilization metric
+  frontend      Hades: orchestration wrapper wiring the above
+  simheap       byte-granular address-space simulator for the paper's
+                YCSB/CrestDB evaluation (numpy, trace-driven)
+"""
+from repro.core import object_table  # noqa: F401
+from repro.core.frontend import Hades, HadesOptions  # noqa: F401
+from repro.core.pool import PoolConfig, make_config  # noqa: F401

@@ -1,0 +1,98 @@
+"""Page-level reclamation backends (paper §3.3 / §5.2).
+
+Backends are *object-oblivious by construction*: their only input is the
+per-superblock summary from `pool.superblock_stats` (occupancy, referenced
+bit, region id, tier, evict state) — the same information the kernel's page
+reclaim has (PTE accessed bits + LRU lists). They never see the object
+table. This enforces the paper's decoupling: the frontend engineers the
+address space; an unmodified backend acts on pages.
+
+Four backends, mirroring Figure 7's lines:
+
+  ReactiveBackend   — kswapd analog: demotes only under memory pressure,
+                      preferring unreferenced superblocks (inactive list),
+                      then MADV_COLD candidates, never referenced ones
+                      unless pressure persists.
+  ProactiveBackend  — MADV_PAGEOUT analog: immediately demotes superblocks
+                      the frontend marked as candidates, gated by MIAD
+                      (`proactive_ok`).
+  CapBackend        — cgroup-limit analog: hard cap on resident bytes;
+                      evicts in address order, hot or not — the
+                      "memory-saving-first" baseline that tanks performance
+                      on a fragmented address space.
+  NullBackend       — performance-first baseline: never reclaims.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import pool as pl
+
+
+@dataclasses.dataclass(frozen=True)
+class BackendConfig:
+    kind: str = "reactive"          # reactive | proactive | cap | null
+    hbm_target_bytes: int = 0       # pressure target (0 = no pressure)
+
+
+def _demote_k(tier: jax.Array, evict: jax.Array, victim_priority: jax.Array,
+              k: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Demote the `k` highest-priority victims (priority > 0) to HOST.
+    Returns (tier, evict). Fixed-shape: uses a full sort over superblocks."""
+    n = tier.shape[0]
+    # sort descending by priority; take first k with priority > 0
+    order = jnp.argsort(-victim_priority)
+    ranked_prio = victim_priority[order]
+    take = (jnp.arange(n) < k) & (ranked_prio > 0)
+    chosen = jnp.zeros((n,), jnp.bool_).at[order].set(take)
+    tier = jnp.where(chosen, pl.HOST, tier).astype(jnp.int8)
+    evict = jnp.where(chosen, pl.PAGED_OUT, evict).astype(jnp.int8)
+    return tier, evict
+
+
+def step(cfg: BackendConfig, pool_cfg: pl.PoolConfig,
+         stats: Dict[str, jax.Array], tier: jax.Array, evict: jax.Array,
+         proactive_ok: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """One backend pass over superblock summaries -> new (tier, evict).
+
+    `stats` comes from pool.superblock_stats — page-level info only.
+    """
+    occ = stats["occupancy"]
+    ref = stats["referenced"]
+    resident = (occ > 0) & (tier == pl.HBM)
+
+    if cfg.kind == "null":
+        return tier, evict
+
+    if cfg.kind == "proactive":
+        # Demote every MADV_COLD candidate once MIAD says it's safe.
+        do = resident & (evict == pl.CANDIDATE) & proactive_ok
+        tier = jnp.where(do, pl.HOST, tier).astype(jnp.int8)
+        evict = jnp.where(do, pl.PAGED_OUT, evict).astype(jnp.int8)
+        return tier, evict
+
+    # pressure-driven backends: how many superblocks over target?
+    target_sbs = max(cfg.hbm_target_bytes, 0) // pool_cfg.sb_bytes  # static
+    k = jnp.maximum(jnp.sum(resident).astype(jnp.int32) - target_sbs, 0)
+
+    if cfg.kind == "reactive":
+        # kswapd-like victim priority: candidates (3) > unreferenced (2)
+        # > referenced (1); empty/host-resident excluded (0).
+        prio = jnp.where(resident,
+                         jnp.where(evict == pl.CANDIDATE, 3,
+                                   jnp.where(~ref, 2, 1)), 0)
+        return _demote_k(tier, evict, prio, k)
+
+    if cfg.kind == "cap":
+        # cgroup cap: page-granular and hotness-blind — evicts resident
+        # superblocks in (reverse) address order regardless of referenced
+        # bits. On a fragmented address space this hits hot objects.
+        n = tier.shape[0]
+        prio = jnp.where(resident, n - jnp.arange(n), 0)
+        return _demote_k(tier, evict, prio, k)
+
+    raise ValueError(cfg.kind)

@@ -1,0 +1,179 @@
+"""Object Collector — periodic scan + lock-free migration (paper §4).
+
+Each collect pass, run between application steps (the migration window):
+
+  1. Scan every table word: read access bits; update per-object CIW
+     (Consecutive Inactive Windows).
+  2. Classify (Fig. 5 state machine):
+        accessed & heap in {NEW, COLD}         -> migrate to HOT
+        ~accessed & CIW > C_t & heap in {NEW,HOT} -> migrate to COLD
+  3. Migrate: an object moves ONLY if its ATC is zero (the paper's
+     optimistic lock-free rule — an object observed in active use during
+     the armed window is skipped and retried next pass; forward progress
+     is never blocked).
+  4. Destination slots are taken densely from the start of the target
+     region, so HOT stays compact (huge-page-promotable) and COLD
+     superblocks become uniformly cold.
+  5. MIAD updates C_t from the window's promotion rate; access bits and
+     ATCs are cleared; the epoch advances.
+
+Everything is a fixed-shape array program: "no objects to move" is the
+all-false mask, so the pass jits once and runs every window.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import object_table as ot
+from repro.core import policy
+from repro.core import pool as pl
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectorConfig:
+    miad: policy.MiadConfig = dataclasses.field(default_factory=policy.MiadConfig)
+    # keep NEW objects in NEW until they show a verdict (paper: NEW heap
+    # absorbs fresh allocations; they migrate on first classification)
+    promote_new_on_access: bool = True
+
+
+def _move_to_region(cfg: pl.PoolConfig, state: Dict, move_mask: jax.Array,
+                    dest_heap: int) -> Tuple[Dict, jax.Array]:
+    """Migrate all objects with move_mask=True into `dest_heap`'s region.
+    Objects that don't fit (region full) are left in place (retried next
+    window). Returns (state, n_moved)."""
+    lo, hi = cfg.region(dest_heap)
+    tbl = state["table"]
+    ids = jnp.arange(cfg.max_objects, dtype=jnp.int32)
+    words = tbl
+    src_slot = ot.slot_of(words).astype(jnp.int32)
+
+    # rank movers; grab that many free slots from the region (dense-first)
+    rank = jnp.cumsum(move_mask.astype(jnp.int32)) - 1
+    free = state["slot_owner"][lo:hi] == -1
+    csum = jnp.cumsum(free.astype(jnp.int32))
+    n_free = csum[-1]
+    fr = jnp.where(free, csum - 1, hi - lo)
+    slot_for_rank = jnp.full((hi - lo + 1,), 0, jnp.int32) \
+        .at[fr].set(jnp.arange(hi - lo, dtype=jnp.int32), mode="drop")
+    dst_rel = slot_for_rank[jnp.clip(rank, 0, hi - lo)]
+    ok = move_mask & (rank < n_free) & (rank >= 0)
+    dst_slot = jnp.where(ok, dst_rel + lo, src_slot)
+
+    # data copy (functional: reads pre-move data, so src/dst aliasing with
+    # in-region compaction is safe by construction)
+    data = state["data"].at[jnp.where(ok, dst_slot, cfg.n_slots)].set(
+        state["data"][src_slot], mode="drop")
+    # slot ownership: clear src, claim dst
+    owner = state["slot_owner"].at[jnp.where(ok, src_slot, cfg.n_slots)] \
+        .set(-1, mode="drop")
+    owner = owner.at[jnp.where(ok, dst_slot, cfg.n_slots)].set(
+        ids, mode="drop")
+    # table word: new slot + heap (flags preserved; cleared later in pass)
+    new_words = ot.with_heap(ot.with_slot(words, dst_slot.astype(jnp.uint32)),
+                             dest_heap)
+    tbl = jnp.where(ok, new_words, tbl)
+    return dict(state, data=data, slot_owner=owner, table=tbl), jnp.sum(ok)
+
+
+def collect(pool_cfg: pl.PoolConfig, col_cfg: CollectorConfig,
+            state: Dict) -> Tuple[Dict, Dict[str, jax.Array]]:
+    """One Object Collector pass. Returns (state, report)."""
+    tbl = state["table"]
+    live = ot.is_live(tbl)
+    acc = (ot.access_of(tbl) == 1) & live
+    atc = ot.atc_of(tbl)
+    heap = ot.heap_of(tbl)
+    ct = jnp.floor(state["ciw_threshold"]).astype(jnp.uint32)
+
+    # --- CIW update (accessed -> 0; idle -> +1, saturating) ---
+    ciw = ot.ciw_of(tbl)
+    ciw = jnp.where(acc, 0, jnp.minimum(ciw + 1, ot.CIW_SAT))
+    ciw = jnp.where(live, ciw, 0)
+
+    # --- classification (Fig. 5) ---
+    to_hot = acc & ((heap == ot.COLD) |
+                    ((heap == ot.NEW) & col_cfg.promote_new_on_access))
+    to_cold = (~acc) & (ciw > ct) & ((heap == ot.NEW) | (heap == ot.HOT))
+    movable = live & (atc == 0)          # the lock-free rule
+    to_hot &= movable
+    to_cold &= movable
+
+    # write back CIW before moving (moves preserve flag bits)
+    tbl = (tbl & ~(ot.CIW_MASK << ot.CIW_SHIFT)) | \
+        (ciw.astype(jnp.uint32) << ot.CIW_SHIFT)
+    state = dict(state, table=tbl)
+
+    state, n_hot = _move_to_region(pool_cfg, state, to_hot, ot.HOT)
+    state, n_cold = _move_to_region(pool_cfg, state, to_cold, ot.COLD)
+    skipped_atc = jnp.sum(live & (atc > 0) &
+                          (acc | ((ciw > ct) & (heap != ot.COLD))))
+
+    # --- MIAD on the window's promotion rate ---
+    new_ct, calm, rate, proactive_ok = policy.update(
+        col_cfg.miad, state["ciw_threshold"], state["calm_windows"],
+        state["win_promos"], state["win_accesses"])
+
+    # --- mark uniformly-cold COLD-region superblocks as MADV_COLD
+    #     candidates (frontend -> backend signal) ---
+    stats = pl.superblock_stats(pool_cfg, state)
+    cold_uniform = (stats["region"] == ot.COLD) & (stats["occupancy"] > 0) \
+        & (~stats["referenced"]) & (state["sb_tier"] == pl.HBM)
+    sb_evict = jnp.where(cold_uniform & (state["sb_evict"] == pl.NORMAL),
+                         pl.CANDIDATE, state["sb_evict"]).astype(jnp.int8)
+
+    # --- clear access bits + ATCs; advance epoch; reset window counters ---
+    # (stats above were computed PRE-clear: backends must see the closing
+    # window's referenced bits, or kswapd degenerates into the cap)
+    tbl = ot.clear_access_and_atc(state["table"])
+    report = {
+        "moved_to_hot": n_hot, "moved_to_cold": n_cold,
+        "skipped_atc": skipped_atc,
+        "promotion_rate": rate, "proactive_ok": proactive_ok,
+        "ciw_threshold": new_ct,
+        "win_accesses": state["win_accesses"],
+        "win_faults": state["win_faults"],
+        "sb_stats": dict(stats, evict=sb_evict),
+    }
+    state = dict(
+        state, table=tbl, sb_evict=sb_evict, ciw_threshold=new_ct,
+        calm_windows=calm, epoch=state["epoch"] + 1,
+        armed=jnp.zeros((), jnp.bool_),
+        win_accesses=jnp.zeros((), jnp.int32),
+        win_promos=jnp.zeros((), jnp.int32),
+        win_faults=jnp.zeros((), jnp.int32),
+        total_moves=state["total_moves"] + (n_hot + n_cold).astype(jnp.int32))
+    return state, report
+
+
+def arm(state: Dict) -> Dict:
+    """Arm the migration window: subsequent reads bump ATCs (the epoch-based
+    activation of tracking — zero overhead when unarmed, paper §4)."""
+    return dict(state, armed=jnp.ones((), jnp.bool_))
+
+
+def compact_heap(pool_cfg: pl.PoolConfig, state: Dict, heap: int) -> Dict:
+    """Repack a region densely (objects to region start, holes to the end).
+    Out-of-place permutation — safe under any aliasing."""
+    lo, hi = pool_cfg.region(heap)
+    owner = state["slot_owner"]
+    seg = owner[lo:hi]
+    live = seg >= 0
+    csum = jnp.cumsum(live.astype(jnp.int32))
+    new_rel = jnp.where(live, csum - 1, -1)
+    src = jnp.arange(lo, hi, dtype=jnp.int32)
+    dst = jnp.where(live, new_rel + lo, pool_cfg.n_slots)
+
+    data = state["data"].at[dst].set(state["data"][src], mode="drop")
+    new_seg_owner = jnp.full_like(seg, -1).at[
+        jnp.where(live, new_rel, hi - lo)].set(seg, mode="drop")
+    owner = owner.at[src - lo + lo].set(new_seg_owner)  # in-region overwrite
+    tbl = state["table"].at[jnp.where(live, seg, pool_cfg.max_objects)].set(
+        ot.with_slot(state["table"][jnp.maximum(seg, 0)],
+                     (new_rel + lo).astype(jnp.uint32)), mode="drop")
+    return dict(state, data=data, slot_owner=owner, table=tbl)

@@ -1,0 +1,151 @@
+"""HADES frontend orchestration — the public API of the paper's system.
+
+`Hades` wires the pieces together exactly as Figure 4 draws them:
+
+    application --alloc/read/write--> HadesPool (object table + heaps)
+                                         |
+                          every N steps: arm -> collect (Object Collector,
+                                         MIAD, MADV_COLD candidates)
+                                         |
+                             superblock stats (page-level view only)
+                                         v
+                                    backend.step (reactive / proactive /
+                                    cap / null — unmodified, oblivious)
+
+The class is a thin stateful convenience wrapper: all state lives in a
+pytree (`self.state`) and every transition is a jitted pure function, so
+the same machinery runs inside pjit'd serving steps (see models/kvcache).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import backend as be
+from repro.core import collector as col
+from repro.core import object_table as ot
+from repro.core import page_util
+from repro.core import policy
+from repro.core import pool as pl
+
+
+@dataclasses.dataclass(frozen=True)
+class HadesOptions:
+    collect_every: int = 8
+    backend: be.BackendConfig = dataclasses.field(
+        default_factory=be.BackendConfig)
+    collector: col.CollectorConfig = dataclasses.field(
+        default_factory=col.CollectorConfig)
+    enabled: bool = True           # False = allocator-only (no tidying)
+    # Arm ATC tracking for the window preceding each collect. The paper's
+    # scope guards decrement on function EXIT; in a synchronous loop every
+    # step has exited before the collector runs, so nothing is in flight
+    # and arming would only veto migrations spuriously. Set True when the
+    # runtime overlaps step dispatch with collection (async serving) —
+    # then ATC>0 marks objects a concurrent step may still dereference.
+    overlap_collect: bool = False
+
+
+class Hades:
+    """One managed pool + its collector/backend loop."""
+
+    def __init__(self, pool_cfg: pl.PoolConfig,
+                 opts: Optional[HadesOptions] = None):
+        self.cfg = pool_cfg
+        self.opts = opts or HadesOptions()
+        self.state = pl.init(pool_cfg)
+        self._step = 0
+        self.last_report: Dict[str, jax.Array] = {}
+        # jitted transitions (static config closed over)
+        self._alloc = jax.jit(functools.partial(pl.alloc, pool_cfg))
+        self._read = jax.jit(functools.partial(pl.read, pool_cfg))
+        self._write = jax.jit(functools.partial(pl.write, pool_cfg))
+        self._free = jax.jit(functools.partial(pl.free, pool_cfg))
+        self._collect = jax.jit(functools.partial(
+            col.collect, pool_cfg, self.opts.collector))
+        self._backend = jax.jit(functools.partial(
+            be.step, self.opts.backend, pool_cfg))
+
+    # -- application-facing ops ---------------------------------------------
+    def alloc(self, obj_ids, values):
+        self.state = self._alloc(self.state, jnp.asarray(obj_ids, jnp.int32),
+                                 values)
+        self._tick()
+
+    def read(self, obj_ids) -> jax.Array:
+        vals, self.state = self._read(self.state,
+                                      jnp.asarray(obj_ids, jnp.int32))
+        self._tick()
+        return vals
+
+    def write(self, obj_ids, values):
+        self.state = self._write(self.state, jnp.asarray(obj_ids, jnp.int32),
+                                 values)
+        self._tick()
+
+    def free(self, obj_ids):
+        self.state = self._free(self.state, jnp.asarray(obj_ids, jnp.int32))
+
+    def end_load_phase(self):
+        """Clear load-time access bits + window counters without
+        classifying — the run starts with a fresh observation window
+        (allocation stores are not workload accesses)."""
+        self.state = dict(
+            self.state,
+            table=ot.clear_access_and_atc(self.state["table"]),
+            win_accesses=jnp.zeros((), jnp.int32),
+            win_promos=jnp.zeros((), jnp.int32),
+            win_faults=jnp.zeros((), jnp.int32))
+        self._step = 0
+
+    # -- collector/backend loop ----------------------------------------------
+    def _tick(self):
+        self._step += 1
+        if not self.opts.enabled:
+            return
+        every = self.opts.collect_every
+        # epoch protocol: ATC instrumentation is live only during the
+        # armed step, and only when collection overlaps execution
+        if self.opts.overlap_collect and self._step % every == every - 1:
+            self.state = col.arm(self.state)
+        elif self._step % every == 0:
+            self.collect()
+
+    def collect(self):
+        self.state, report = self._collect(self.state)
+        # backend sees the closing window's superblock stats (pre-clear)
+        stats = report.pop("sb_stats")
+        tier, evict = self._backend(stats, self.state["sb_tier"],
+                                    self.state["sb_evict"],
+                                    report["proactive_ok"])
+        self.state = dict(self.state, sb_tier=tier, sb_evict=evict)
+        self.last_report = report
+
+    # -- metrics ---------------------------------------------------------------
+    def rss_bytes(self) -> int:
+        return int(pl.rss_bytes(self.cfg, self.state))
+
+    def host_bytes(self) -> int:
+        return int(pl.host_bytes(self.cfg, self.state))
+
+    def page_utilization(self) -> float:
+        return float(page_util.from_pool(self.cfg, self.state))
+
+    def heap_histogram(self) -> Dict[str, int]:
+        tbl = self.state["table"]
+        h = ot.heap_of(tbl)
+        live = ot.is_live(tbl)
+        return {name: int(jnp.sum(live & (h == hid)))
+                for name, hid in (("new", ot.NEW), ("hot", ot.HOT),
+                                  ("cold", ot.COLD))}
+
+    def counters(self) -> Dict[str, int]:
+        s = self.state
+        return {"faults": int(s["total_faults"]),
+                "moves": int(s["total_moves"]),
+                "epoch": int(s["epoch"]),
+                "ciw_threshold": float(s["ciw_threshold"])}

@@ -1,0 +1,55 @@
+"""MIAD feedback control (paper §4, "Adaptive Workload Response").
+
+The promotion rate — the fraction of window accesses that hit the COLD
+heap — is the proxy for page-fault pressure. Adapting TCP congestion
+control, the demotion threshold C_t follows a *multiplicative increase /
+additive decrease* (MIAD) law:
+
+    promo_rate > target  ->  C_t <- min(C_t * mult, C_max)   (back off:
+                             objects must be cold for longer to demote)
+    promo_rate <= target ->  C_t <- max(C_t - add, C_min)    (lean in)
+
+The same signal gates backend escalation: reclamation stays *reactive*
+(MADV_COLD candidates only) until the promotion rate has been safely below
+target for `calm_required` consecutive windows, then *proactive*
+(MADV_PAGEOUT) demotion unlocks. A single hot window de-escalates.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class MiadConfig:
+    target: float = 0.01      # promotion-rate target (paper: ~1%)
+    mult: float = 2.0         # multiplicative increase of C_t
+    add: float = 1.0          # additive decrease of C_t
+    c_min: float = 1.0
+    c_max: float = 16.0
+    calm_required: int = 2    # calm windows before PAGEOUT unlocks
+
+
+def promotion_rate(win_promos: jax.Array, win_accesses: jax.Array
+                   ) -> jax.Array:
+    return win_promos.astype(jnp.float32) / jnp.maximum(
+        win_accesses.astype(jnp.float32), 1.0)
+
+
+def update(cfg: MiadConfig, ciw_threshold: jax.Array,
+           calm_windows: jax.Array, win_promos: jax.Array,
+           win_accesses: jax.Array
+           ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """One MIAD step. Returns (new_C_t, new_calm_windows, promo_rate,
+    proactive_ok)."""
+    rate = promotion_rate(win_promos, win_accesses)
+    hot = rate > cfg.target
+    new_ct = jnp.where(hot,
+                       jnp.minimum(ciw_threshold * cfg.mult, cfg.c_max),
+                       jnp.maximum(ciw_threshold - cfg.add, cfg.c_min))
+    calm = jnp.where(hot, 0, calm_windows + 1)
+    proactive_ok = calm >= cfg.calm_required
+    return new_ct, calm, rate, proactive_ok

@@ -1,0 +1,323 @@
+"""HadesPool — the managed object heap (fixed-size objects, jit-native).
+
+This is the framework-facing realization of the paper's custom allocator +
+three-heap layout (Fig. 5). One pool manages `max_objects` logical objects,
+each occupying exactly one physical slot of `slot_words` elements (KV blocks,
+embedding rows and expert slabs are all fixed-size objects, so the
+fixed-slot restriction costs nothing in the framework; the byte-granular
+CrestKV simulator in `core/simheap.py` handles variable-size objects for the
+paper's YCSB evaluation).
+
+Address-space layout (slot indices):
+
+    [0 .............. new_end) NEW   heap  — fresh allocations
+    [new_end ........ hot_end) HOT   heap  — dense, "huge-page" region
+    [hot_end ........ n_slots) COLD  heap  — uniform-cold, reclaim target
+
+Regions are superblock-aligned; a superblock (`sb_slots` contiguous slots)
+is the reclamation/hugepage unit — the "page" that backends manage. The
+entire pool state is a pytree of arrays, so every operation jits and shards.
+
+Tier/fault model (CPU-runnable stand-in for HBM/host tiers; on a real TPU
+the demotion would be a device_put to `memory_kind="pinned_host"`):
+  sb_tier:  0 = HBM, 1 = HOST (paged out)
+  sb_evict: 0 = NORMAL, 1 = CANDIDATE (MADV_COLD), 2 = PAGED_OUT (PAGEOUT)
+Reading a slot whose superblock is HOST-resident is a *page fault*: the
+superblock is promoted back to HBM and the fault counter increments — the
+signal the MIAD policy keeps below its target.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import object_table as ot
+
+# tiers / evict states
+HBM, HOST = 0, 1
+NORMAL, CANDIDATE, PAGED_OUT = 0, 1, 2
+
+
+@dataclasses.dataclass(frozen=True)
+class PoolConfig:
+    """Static geometry (hashable; closed over by jitted fns)."""
+    max_objects: int
+    slot_words: int            # elements per object slot
+    sb_slots: int              # slots per superblock (reclamation unit)
+    page_slots: int            # slots per 4-KiB-analog page (metric unit)
+    new_sbs: int               # superblocks in the NEW region
+    hot_sbs: int               # superblocks in the HOT region
+    cold_sbs: int              # superblocks in the COLD region
+    dtype: str = "float32"
+    word_bytes: int = 4
+
+    @property
+    def n_sbs(self) -> int:
+        return self.new_sbs + self.hot_sbs + self.cold_sbs
+
+    @property
+    def n_slots(self) -> int:
+        return self.n_sbs * self.sb_slots
+
+    @property
+    def sb_bytes(self) -> int:
+        return self.sb_slots * self.slot_words * self.word_bytes
+
+    @property
+    def slot_bytes(self) -> int:
+        return self.slot_words * self.word_bytes
+
+    def region(self, heap: int) -> Tuple[int, int]:
+        """[start, end) slot range of a heap region."""
+        new_end = self.new_sbs * self.sb_slots
+        hot_end = new_end + self.hot_sbs * self.sb_slots
+        if heap == ot.NEW:
+            return 0, new_end
+        if heap == ot.HOT:
+            return new_end, hot_end
+        if heap == ot.COLD:
+            return hot_end, self.n_slots
+        raise ValueError(heap)
+
+    def sb_region_ids(self) -> jnp.ndarray:
+        """Per-superblock heap-region id [n_sbs]."""
+        return jnp.concatenate([
+            jnp.full((self.new_sbs,), ot.NEW, jnp.int8),
+            jnp.full((self.hot_sbs,), ot.HOT, jnp.int8),
+            jnp.full((self.cold_sbs,), ot.COLD, jnp.int8)])
+
+
+def make_config(max_objects: int, slot_words: int, *, sb_slots: int = 64,
+                page_slots: int = 8, new_frac: float = 0.125,
+                hot_frac: float = 0.375, slack: float = 1.5,
+                dtype: str = "float32") -> PoolConfig:
+    """Size a pool with `slack`x physical slots over max_objects, split into
+    NEW/HOT/COLD regions by fraction."""
+    n_slots = int(max_objects * slack)
+    n_sbs = max(3, -(-n_slots // sb_slots))
+    new_sbs = max(1, int(n_sbs * new_frac))
+    hot_sbs = max(1, int(n_sbs * hot_frac))
+    cold_sbs = max(1, n_sbs - new_sbs - hot_sbs)
+    word_bytes = jnp.dtype(dtype).itemsize
+    return PoolConfig(max_objects=max_objects, slot_words=slot_words,
+                      sb_slots=sb_slots, page_slots=page_slots,
+                      new_sbs=new_sbs, hot_sbs=hot_sbs, cold_sbs=cold_sbs,
+                      dtype=dtype, word_bytes=word_bytes)
+
+
+def init(cfg: PoolConfig) -> Dict[str, jax.Array]:
+    """Fresh pool state (a pytree dict — shardable, checkpointable)."""
+    return {
+        "data": jnp.zeros((cfg.n_slots, cfg.slot_words), jnp.dtype(cfg.dtype)),
+        "table": ot.make_table(cfg.max_objects),
+        "slot_owner": jnp.full((cfg.n_slots,), -1, jnp.int32),
+        "sb_tier": jnp.zeros((cfg.n_sbs,), jnp.int8),
+        "sb_evict": jnp.zeros((cfg.n_sbs,), jnp.int8),
+        # MIAD-controlled demotion threshold C_t (float for mult. updates)
+        "ciw_threshold": jnp.asarray(3.0, jnp.float32),
+        # escalation gate: consecutive windows with promotion rate < target
+        "calm_windows": jnp.zeros((), jnp.int32),
+        "epoch": jnp.zeros((), jnp.int32),
+        "armed": jnp.zeros((), jnp.bool_),   # migration window armed (ATC on)
+        # window counters (reset each collect)
+        "win_accesses": jnp.zeros((), jnp.int32),
+        "win_promos": jnp.zeros((), jnp.int32),   # COLD-heap hits
+        "win_faults": jnp.zeros((), jnp.int32),   # HOST-tier page faults
+        # lifetime counters
+        "total_faults": jnp.zeros((), jnp.int32),
+        "total_moves": jnp.zeros((), jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Allocation — bump into the NEW region's free slots
+# ---------------------------------------------------------------------------
+def _take_free_slots(slot_owner: jax.Array, lo: int, hi: int,
+                     k: int) -> Tuple[jax.Array, jax.Array]:
+    """First `k` free slot indices in [lo, hi). Returns (slots [k], ok [k]);
+    slots where ok=False are invalid (region full)."""
+    free = slot_owner[lo:hi] == -1
+    # rank of each free slot among free slots
+    csum = jnp.cumsum(free.astype(jnp.int32))
+    n_free = csum[-1] if free.shape[0] else jnp.zeros((), jnp.int32)
+    # slot_for_rank[r] = index of the r-th free slot
+    ranks = jnp.where(free, csum - 1, hi - lo)
+    slot_for_rank = jnp.full((hi - lo + 1,), -1, jnp.int32) \
+        .at[ranks].set(jnp.arange(hi - lo, dtype=jnp.int32), mode="drop")
+    want = jnp.arange(k, dtype=jnp.int32)
+    ok = want < n_free
+    slots = jnp.where(ok, slot_for_rank[jnp.minimum(want, hi - lo)], 0) + lo
+    return slots, ok
+
+
+def _alloc_order(cfg: PoolConfig) -> jnp.ndarray:
+    """Slot visit order for allocation: NEW region first (fresh objects
+    belong there), spilling into COLD then HOT when NEW is full — a real
+    allocator never fails while the pool has space."""
+    spans = [cfg.region(ot.NEW), cfg.region(ot.COLD), cfg.region(ot.HOT)]
+    return jnp.concatenate([jnp.arange(lo, hi, dtype=jnp.int32)
+                            for lo, hi in spans])
+
+
+def heap_of_slot(cfg: PoolConfig, slot: jax.Array) -> jax.Array:
+    """Region id a physical slot belongs to (static boundaries)."""
+    new_end = cfg.region(ot.NEW)[1]
+    hot_end = cfg.region(ot.HOT)[1]
+    return jnp.where(slot < new_end, ot.NEW,
+                     jnp.where(slot < hot_end, ot.HOT, ot.COLD)
+                     ).astype(jnp.uint32)
+
+
+def alloc(cfg: PoolConfig, state: Dict, obj_ids: jax.Array,
+          values: jax.Array) -> Dict:
+    """Allocate `obj_ids` (shape [k], int32) in the NEW heap (spilling to
+    COLD/HOT when full) and write `values` [k, slot_words]. Ids already
+    live are re-written in place (update semantics). Ids < 0 ignored."""
+    k = obj_ids.shape[0]
+    tbl = state["table"]
+    ids_safe = jnp.maximum(obj_ids, 0)
+    words = tbl[ids_safe]
+    live = ot.is_live(words) & (obj_ids >= 0)
+    need = (~live) & (obj_ids >= 0)
+
+    # free slots in allocation order (NEW -> COLD -> HOT)
+    order = _alloc_order(cfg)
+    free = state["slot_owner"][order] == -1
+    csum = jnp.cumsum(free.astype(jnp.int32))
+    n_free = csum[-1]
+    fr = jnp.where(free, csum - 1, cfg.n_slots)
+    slot_for_rank = jnp.zeros((cfg.n_slots + 1,), jnp.int32) \
+        .at[fr].set(order, mode="drop")
+    # rank each needed alloc among needed allocs -> pick that free slot
+    rank = jnp.cumsum(need.astype(jnp.int32)) - 1
+    ok_new = need & (rank < n_free) & (rank >= 0)
+    new_slot = slot_for_rank[jnp.clip(rank, 0, cfg.n_slots)]
+
+    # existing objects keep their slot; new ones take the found slot
+    slot = jnp.where(ok_new, new_slot, ot.slot_of(words).astype(jnp.int32))
+    do = live | ok_new
+
+    new_words = jnp.where(
+        ok_new, ot.pack(new_slot.astype(jnp.uint32),
+                        heap_of_slot(cfg, new_slot), access=1),
+        # live update: set access bit
+        words | (ot.ACCESS_MASK << ot.ACCESS_SHIFT))
+    tbl = tbl.at[ids_safe].set(jnp.where(do, new_words, tbl[ids_safe]),
+                               mode="drop")
+    owner = state["slot_owner"].at[jnp.where(ok_new, new_slot, cfg.n_slots)] \
+        .set(jnp.where(ok_new, obj_ids, -1), mode="drop")
+    data = state["data"].at[jnp.where(do, slot, cfg.n_slots)].set(
+        jnp.where(do[:, None], values.astype(state["data"].dtype),
+                  0), mode="drop")
+    return dict(state, table=tbl, slot_owner=owner, data=data,
+                win_accesses=state["win_accesses"] + jnp.sum(do))
+
+
+# ---------------------------------------------------------------------------
+# Read / write — every access flows through the table (the "dereference")
+# ---------------------------------------------------------------------------
+def read(cfg: PoolConfig, state: Dict, obj_ids: jax.Array
+         ) -> Tuple[jax.Array, Dict]:
+    """Gather object payloads for `obj_ids` [k] (−1 entries return zeros).
+    This is the paper's pointer dereference: it sets the access bit, bumps
+    the ATC when a migration window is armed, counts COLD-heap promotions,
+    and faults-in any HOST-resident superblock it touches."""
+    valid = obj_ids >= 0
+    ids = jnp.maximum(obj_ids, 0)
+    words = state["table"][ids]
+    live = ot.is_live(words) & valid
+    slots = ot.slot_of(words).astype(jnp.int32)
+    vals = jnp.where(live[:, None], state["data"][slots], 0)
+
+    tbl = ot.record_access(state["table"], jnp.where(live, obj_ids, -1),
+                           armed=state["armed"])
+
+    # --- fault / promotion accounting ---
+    sbs = slots // cfg.sb_slots
+    on_host = live & (state["sb_tier"][sbs] == HOST)
+    # unique faulted superblocks
+    fault_mask = jnp.zeros((cfg.n_sbs,), jnp.bool_).at[
+        jnp.where(on_host, sbs, cfg.n_sbs)].set(True, mode="drop")
+    n_faults = jnp.sum(fault_mask).astype(jnp.int32)
+    # fault-in: promote superblock back to HBM
+    sb_tier = jnp.where(fault_mask, HBM, state["sb_tier"]).astype(jnp.int8)
+    sb_evict = jnp.where(fault_mask, NORMAL, state["sb_evict"]).astype(jnp.int8)
+
+    promos = jnp.sum(live & (ot.heap_of(words) == ot.COLD)).astype(jnp.int32)
+    accs = jnp.sum(live).astype(jnp.int32)
+
+    state = dict(state, table=tbl, sb_tier=sb_tier, sb_evict=sb_evict,
+                 win_accesses=state["win_accesses"] + accs,
+                 win_promos=state["win_promos"] + promos,
+                 win_faults=state["win_faults"] + n_faults,
+                 total_faults=state["total_faults"] + n_faults)
+    return vals, state
+
+
+def write(cfg: PoolConfig, state: Dict, obj_ids: jax.Array,
+          values: jax.Array) -> Dict:
+    """Scatter payloads to live objects (a store is also an access)."""
+    valid = obj_ids >= 0
+    ids = jnp.maximum(obj_ids, 0)
+    words = state["table"][ids]
+    live = ot.is_live(words) & valid
+    slots = ot.slot_of(words).astype(jnp.int32)
+    data = state["data"].at[jnp.where(live, slots, cfg.n_slots)].set(
+        values.astype(state["data"].dtype), mode="drop")
+    tbl = ot.record_access(state["table"], jnp.where(live, obj_ids, -1),
+                           armed=state["armed"])
+    promos = jnp.sum(live & (ot.heap_of(words) == ot.COLD)).astype(jnp.int32)
+    return dict(state, data=data, table=tbl,
+                win_accesses=state["win_accesses"] + jnp.sum(live),
+                win_promos=state["win_promos"] + promos)
+
+
+def free(cfg: PoolConfig, state: Dict, obj_ids: jax.Array) -> Dict:
+    """Release objects (slot returns to its region's free pool)."""
+    valid = obj_ids >= 0
+    ids = jnp.maximum(obj_ids, 0)
+    words = state["table"][ids]
+    live = ot.is_live(words) & valid
+    slots = ot.slot_of(words).astype(jnp.int32)
+    owner = state["slot_owner"].at[jnp.where(live, slots, cfg.n_slots)] \
+        .set(-1, mode="drop")
+    tbl = state["table"].at[jnp.where(live, ids, cfg.max_objects)].set(
+        ot.free_word(), mode="drop")
+    return dict(state, slot_owner=owner, table=tbl)
+
+
+# ---------------------------------------------------------------------------
+# Superblock summaries (the ONLY view backends get — object-oblivious)
+# ---------------------------------------------------------------------------
+def superblock_stats(cfg: PoolConfig, state: Dict) -> Dict[str, jax.Array]:
+    """Per-superblock: occupancy, referenced (any access bit within),
+    region id, tier, evict state. This is the page-table-level view the
+    paper's unmodified backends consume."""
+    owner = state["slot_owner"]
+    live_slot = owner >= 0
+    sb_of_slot = jnp.arange(cfg.n_slots) // cfg.sb_slots
+    occ = jnp.zeros((cfg.n_sbs,), jnp.int32).at[sb_of_slot].add(
+        live_slot.astype(jnp.int32))
+    acc_obj = ot.access_of(state["table"]) == 1
+    slot_acc = live_slot & acc_obj[jnp.maximum(owner, 0)]
+    ref = jnp.zeros((cfg.n_sbs,), jnp.bool_).at[sb_of_slot].max(slot_acc)
+    return {"occupancy": occ, "referenced": ref,
+            "region": cfg.sb_region_ids(),
+            "tier": state["sb_tier"], "evict": state["sb_evict"]}
+
+
+def rss_bytes(cfg: PoolConfig, state: Dict) -> jax.Array:
+    """Resident (HBM-tier) bytes: occupied superblocks still in HBM."""
+    stats_occ = superblock_stats(cfg, state)["occupancy"]
+    resident = (stats_occ > 0) & (state["sb_tier"] == HBM)
+    return jnp.sum(resident).astype(jnp.float32) * float(cfg.sb_bytes)
+
+
+def host_bytes(cfg: PoolConfig, state: Dict) -> jax.Array:
+    stats_occ = superblock_stats(cfg, state)["occupancy"]
+    out = (stats_occ > 0) & (state["sb_tier"] == HOST)
+    return jnp.sum(out).astype(jnp.float32) * float(cfg.sb_bytes)

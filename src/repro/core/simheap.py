@@ -1,0 +1,410 @@
+"""SimHeap — byte-granular virtual-address-space simulator (numpy).
+
+The jit pool (`core/pool.py`) manages fixed-size framework objects. The
+paper's *evaluation*, though, is about C++ heaps: variable-size objects
+(30 B keys, 1024 B values, index nodes), 4 KiB pages, 2 MiB huge pages,
+kswapd/madvise backends. SimHeap reproduces that environment faithfully —
+it tracks *placement* (addresses), not payloads, so 10M-key YCSB runs fit
+in metadata memory.
+
+Semantics mirrored from HADES:
+  * three heaps as contiguous address ranges (NEW / HOT / COLD);
+  * bump allocation + collector-time compaction (pointers are updatable
+    through the object table — that is the paper's enabling insight);
+  * per-object access bit / CIW / ATC words, identical state machine;
+  * MIAD feedback on the COLD-heap promotion rate;
+  * page-level backends (reactive / proactive / cap / null) that see only
+    page metadata: resident, referenced, evict-candidate;
+  * page faults promote pages back and cost `fault_ns` (P4800x-class);
+  * huge-page promotion of dense 2 MiB runs in the HOT heap; THP-style
+    bloat is visible if promotion is applied to sparse runs.
+
+Cost model (fig 6c): every tracked access pays `track_ns` (the 4–5 ns
+access-bit op); the first observation of an object in a window pays the
+scope-guard O(log N) term; faults pay `fault_ns`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+NEW, HOT, COLD = 0, 1, 2
+PAGE = 4096
+HUGE = 2 * 1024 * 1024
+ALIGN = 16
+
+
+@dataclasses.dataclass
+class SimConfig:
+    max_objects: int
+    heap_bytes: int                 # per-heap address range
+    backend: str = "reactive"       # reactive | proactive | cap | null
+    hbm_target_bytes: int = 0       # pressure target for reactive/cap
+    ciw_threshold: float = 3.0
+    ciw_min: float = 1.0
+    ciw_max: float = 16.0
+    promotion_target: float = 0.01
+    miad_mult: float = 2.0
+    miad_add: float = 1.0
+    calm_required: int = 2
+    enabled: bool = True            # False = no tidying (baseline layout)
+    track_ns: float = 4.5           # access-bit SET (paper: 4-5 ns, L1-ish)
+    check_ns: float = 0.5           # already-set fast path ("skip if set")
+    guard_ns: float = 1.0           # scope-guard cost per log2(N) level
+    fault_ns: float = 15_000.0      # SSD swap fault (P4800x-class)
+    base_op_ns: float = 1_500.0     # baseline cost of one KV op (CrestDB)
+    huge_occupancy: float = 0.90    # hugepage promotion threshold
+
+
+class SimHeap:
+    """Trace-driven address-space engine. All ops are vectorized."""
+
+    def __init__(self, cfg: SimConfig, seed: int = 0):
+        self.cfg = cfg
+        n = cfg.max_objects
+        self.addr = np.full(n, -1, np.int64)       # byte address
+        self.size = np.zeros(n, np.int64)
+        self.heap = np.full(n, -1, np.int8)        # -1 = free
+        self.access = np.zeros(n, bool)
+        self.ciw = np.zeros(n, np.int16)
+        self.atc = np.zeros(n, np.int16)
+        self.armed = False
+        # bump cursors per heap (addresses are heap-relative + heap base)
+        self.base = {NEW: 0, HOT: cfg.heap_bytes, COLD: 2 * cfg.heap_bytes}
+        self.cursor = {NEW: 0, HOT: 0, COLD: 0}
+        self.live_bytes = {NEW: 0, HOT: 0, COLD: 0}
+        # page metadata over the whole 3-heap address space
+        self.n_pages = (3 * cfg.heap_bytes) // PAGE
+        self.resident = np.zeros(self.n_pages, bool)
+        self.referenced = np.zeros(self.n_pages, bool)
+        self.evict = np.zeros(self.n_pages, np.int8)  # 0/1 cand/2 out
+        # MIAD state
+        self.ciw_threshold = cfg.ciw_threshold
+        self.calm_windows = 0
+        self.proactive_ok = False
+        # window + lifetime counters
+        self.win_accesses = 0
+        self.win_promos = 0
+        self.win_first_obs = 0
+        self.win_faults = 0
+        self.win_track_ops = 0
+        self.epoch = 0
+        self.total_faults = 0
+        self.total_moves = 0
+        self.total_ns = 0.0
+        self.window_log: list = []
+
+    # -- allocation ---------------------------------------------------------
+    def alloc(self, ids: np.ndarray, sizes: np.ndarray,
+              heap: int = NEW) -> None:
+        """Bump-allocate objects into `heap` (NEW unless placing an
+        un-tidied baseline, which scatters everything into one heap)."""
+        ids = np.asarray(ids, np.int64)
+        sizes = np.asarray(sizes, np.int64)
+        aligned = (sizes + ALIGN - 1) // ALIGN * ALIGN
+        offs = np.cumsum(aligned) - aligned
+        start = self.cursor[heap]
+        need = int(offs[-1] + aligned[-1]) if len(ids) else 0
+        if start + need > self.cfg.heap_bytes:
+            self._compact(heap)
+            start = self.cursor[heap]
+            if start + need > self.cfg.heap_bytes:
+                raise MemoryError(f"heap {heap} exhausted")
+        addrs = self.base[heap] + start + offs
+        self.addr[ids] = addrs
+        self.size[ids] = sizes
+        self.heap[ids] = heap
+        self.access[ids] = True
+        self.ciw[ids] = 0
+        self.cursor[heap] = start + need
+        self.live_bytes[heap] += int(aligned.sum())
+        self._touch_pages(addrs, sizes, fault=True)
+        self.win_accesses += len(ids)
+
+    def free(self, ids: np.ndarray) -> None:
+        ids = np.asarray(ids, np.int64)
+        ids = ids[self.heap[ids] >= 0]
+        aligned = (self.size[ids] + ALIGN - 1) // ALIGN * ALIGN
+        for h in (NEW, HOT, COLD):
+            self.live_bytes[h] -= int(aligned[self.heap[ids] == h].sum())
+        self.heap[ids] = -1
+        self.addr[ids] = -1
+
+    # -- access (the dereference) --------------------------------------------
+    def access_objects(self, ids: np.ndarray) -> None:
+        """Record accesses (duplicates allowed — dedup is the 'skip if
+        already set' fast path)."""
+        ids = np.asarray(ids, np.int64)
+        ids = ids[self.heap[ids] >= 0]
+        if len(ids) == 0:
+            return
+        uniq = np.unique(ids)
+        newly = ~self.access[uniq]
+        self.win_first_obs += int(newly.sum())
+        self.access[uniq] = True
+        if self.armed:
+            np.add.at(self.atc, ids, 1)
+        self.win_promos += int((self.heap[uniq] == COLD).sum())
+        self.win_accesses += len(ids)
+        self.win_track_ops += len(ids)
+        self._touch_pages(self.addr[uniq], self.size[uniq], fault=True)
+
+    def _touch_pages(self, addrs: np.ndarray, sizes: np.ndarray,
+                     fault: bool) -> None:
+        if len(addrs) == 0:
+            return
+        first = addrs // PAGE
+        last = (addrs + np.maximum(sizes, 1) - 1) // PAGE
+        span = int((last - first).max()) + 1
+        pages = np.unique(np.concatenate(
+            [np.minimum(first + i, last) for i in range(span)]))
+        out = pages[self.evict[pages] == 2]
+        self.win_faults += len(out)
+        self.total_faults += len(out)
+        self.evict[pages] = 0
+        self.resident[pages] = True
+        self.referenced[pages] = True
+
+    # -- collector ------------------------------------------------------------
+    def arm(self) -> None:
+        self.armed = True
+
+    def collect(self) -> Dict[str, float]:
+        """Object Collector pass: CIW update, classification, migration,
+        compaction, MIAD, backend handoff signals."""
+        cfg = self.cfg
+        live = self.heap >= 0
+        acc = self.access & live
+        self.ciw[acc] = 0
+        idle = live & ~self.access
+        self.ciw[idle] = np.minimum(self.ciw[idle] + 1, 31)
+
+        report = {"promotion_rate": self.promotion_rate(),
+                  "epoch": self.epoch}
+        if cfg.enabled:
+            ct = math.floor(self.ciw_threshold)
+            movable = self.atc == 0
+            to_hot = acc & np.isin(self.heap, (NEW, COLD)) & movable
+            to_cold = idle & (self.ciw > ct) & \
+                np.isin(self.heap, (NEW, HOT)) & movable
+            self._migrate(np.nonzero(to_hot)[0], HOT)
+            self._migrate(np.nonzero(to_cold)[0], COLD)
+            report["moved_to_hot"] = int(to_hot.sum())
+            report["moved_to_cold"] = int(to_cold.sum())
+            # Compact NEW/HOT when >30% holes. The COLD heap is NEVER
+            # compacted in normal operation: its pages may be paged out,
+            # and touching them would fault the whole point away. It is
+            # compacted only on emergency (migration target full), with
+            # the fault cost charged honestly (_compact counts them).
+            for h in (NEW, HOT):
+                if self.cursor[h] > 1.3 * max(self.live_bytes[h], 1):
+                    self._compact(h)
+
+        # MIAD
+        rate = self.promotion_rate()
+        if rate > cfg.promotion_target:
+            self.ciw_threshold = min(self.ciw_threshold * cfg.miad_mult,
+                                     cfg.ciw_max)
+            self.calm_windows = 0
+        else:
+            self.ciw_threshold = max(self.ciw_threshold - cfg.miad_add,
+                                     cfg.ciw_min)
+            self.calm_windows += 1
+        self.proactive_ok = self.calm_windows >= cfg.calm_required
+
+        # frontend -> backend signal: fully-cold COLD-heap pages -> MADV_COLD
+        if cfg.enabled:
+            lo = self.base[COLD] // PAGE
+            hi = (self.base[COLD] + self.cursor[COLD]) // PAGE + 1
+            cand = self.resident[lo:hi] & ~self.referenced[lo:hi] & \
+                (self.evict[lo:hi] == 0)
+            self.evict[lo:hi][cand] = 1
+
+        # window accounting -> overhead model. Instrumentation costs apply
+        # only when HADES is enabled (no tracking in the baseline); fault
+        # penalties always apply (they are the backend's, not HADES').
+        ns = self.win_faults * cfg.fault_ns
+        if cfg.enabled:
+            log_n = max(math.log2(max(int(live.sum()), 2)), 1.0)
+            ns += (self.win_first_obs * (cfg.track_ns + cfg.guard_ns * log_n)
+                   + (self.win_track_ops - self.win_first_obs) * cfg.check_ns)
+        self.total_ns += ns
+        report.update(window_overhead_ns=ns, faults=self.win_faults,
+                      accesses=self.win_accesses,
+                      page_utilization=self.page_utilization(),
+                      rss_bytes=self.rss_bytes(),
+                      ciw_threshold=self.ciw_threshold)
+        self.window_log.append(report)
+
+        # reset window state (backends act on the CLOSING window's
+        # referenced bits — snapshot before clearing)
+        self.last_referenced = self.referenced.copy()
+        self.access[:] = False
+        self.atc[:] = 0
+        self.armed = False
+        self.referenced[:] = False
+        self.win_accesses = self.win_promos = 0
+        self.win_first_obs = self.win_faults = self.win_track_ops = 0
+        self.epoch += 1
+        return report
+
+    def _migrate(self, ids: np.ndarray, dest: int) -> None:
+        if len(ids) == 0:
+            return
+        sizes = self.size[ids]
+        aligned = (sizes + ALIGN - 1) // ALIGN * ALIGN
+        offs = np.cumsum(aligned) - aligned
+        need = int(offs[-1] + aligned[-1])
+        if self.cursor[dest] + need > self.cfg.heap_bytes:
+            self._compact(dest)
+            if self.cursor[dest] + need > self.cfg.heap_bytes:
+                return  # dest full: skip this window (forward progress)
+        for h in (NEW, HOT, COLD):
+            sel = self.heap[ids] == h
+            self.live_bytes[h] -= int(aligned[sel].sum())
+        self.addr[ids] = self.base[dest] + self.cursor[dest] + offs
+        self.heap[ids] = dest
+        self.cursor[dest] += need
+        self.live_bytes[dest] += need
+        self.total_moves += len(ids)
+        self._touch_pages(self.addr[ids], sizes, fault=False)
+
+    def _compact(self, heap: int) -> None:
+        """Slide live objects to the heap base (table-mediated pointer
+        rewrite — no application involvement). Compacting a region with
+        paged-out pages faults them in first — charged to the window."""
+        lo_pg = self.base[heap] // PAGE
+        hi_pg = (self.base[heap] + self.cursor[heap]) // PAGE + 1
+        paged_out = int((self.evict[lo_pg:hi_pg] == 2).sum())
+        self.win_faults += paged_out
+        self.total_faults += paged_out
+        ids = np.nonzero(self.heap == heap)[0]
+        if len(ids):
+            order = np.argsort(self.addr[ids], kind="stable")
+            ids = ids[order]
+            aligned = (self.size[ids] + ALIGN - 1) // ALIGN * ALIGN
+            offs = np.cumsum(aligned) - aligned
+            self.addr[ids] = self.base[heap] + offs
+            end = int(offs[-1] + aligned[-1])
+        else:
+            end = 0
+        # the compacted prefix was written to (resident); pages beyond the
+        # new cursor are free
+        plo = self.base[heap] // PAGE
+        pmid = (self.base[heap] + end + PAGE - 1) // PAGE
+        phi = (self.base[heap] + self.cfg.heap_bytes) // PAGE
+        self.resident[plo:pmid] = True
+        self.evict[plo:pmid] = 0
+        self.resident[pmid:phi] = False
+        self.evict[pmid:phi] = 0
+        self.cursor[heap] = end
+        self.live_bytes[heap] = end
+
+    # -- backend (page-level, object-oblivious) --------------------------------
+    def backend_step(self) -> None:
+        kind = self.cfg.backend
+        if kind == "null":
+            return
+        if kind == "proactive":
+            if self.proactive_ok:
+                sel = self.resident & (self.evict == 1)
+                self.evict[sel] = 2
+                self.resident[sel] = False
+            return
+        target_pages = max(self.cfg.hbm_target_bytes, 0) // PAGE
+        n_res = int(self.resident.sum())
+        over = n_res - target_pages
+        if over <= 0:
+            return
+        referenced = getattr(self, "last_referenced", self.referenced)
+        if kind == "reactive":
+            # kswapd: evict candidates first, then unreferenced, then stop
+            # (never evicts referenced pages — that is its memory ceiling)
+            for sel in (self.resident & (self.evict == 1),
+                        self.resident & ~referenced):
+                idx = np.nonzero(sel)[0][:over]
+                self.evict[idx] = 2
+                self.resident[idx] = False
+                over -= len(idx)
+                if over <= 0:
+                    return
+        elif kind == "cap":
+            # cgroup cap: hotness-blind, evicts in address order until
+            # under target — hits pages with hot objects on them.
+            idx = np.nonzero(self.resident)[0][:over]
+            self.evict[idx] = 2
+            self.resident[idx] = False
+        else:
+            raise ValueError(kind)
+
+    # -- metrics ----------------------------------------------------------------
+    def promotion_rate(self) -> float:
+        return self.win_promos / max(self.win_accesses, 1)
+
+    def page_utilization(self) -> float:
+        """Unique accessed bytes / (touched pages x 4 KiB), this window."""
+        live = (self.heap >= 0) & self.access
+        if not live.any():
+            return 1.0
+        ids = np.nonzero(live)[0]
+        ubytes = int(self.size[ids].sum())
+        first = self.addr[ids] // PAGE
+        last = (self.addr[ids] + np.maximum(self.size[ids], 1) - 1) // PAGE
+        span = int((last - first).max()) + 1
+        pages = np.unique(np.concatenate(
+            [np.minimum(first + i, last) for i in range(span)]))
+        return ubytes / (len(pages) * PAGE)
+
+    def per_page_utilization(self) -> np.ndarray:
+        """Utilized fraction of every page touched this window (fig 2's
+        CDF): accessed bytes landing on each page / 4096."""
+        live = (self.heap >= 0) & self.access
+        if not live.any():
+            return np.ones(1)
+        ids = np.nonzero(live)[0]
+        addr, size = self.addr[ids], self.size[ids]
+        acc = np.zeros(self.n_pages + 1, np.int64)
+        first = addr // PAGE
+        last = (addr + np.maximum(size, 1) - 1) // PAGE
+        span = int((last - first).max()) + 1
+        for i in range(span):
+            pg = first + i
+            sel = pg <= last
+            # bytes of this object on page pg
+            start = np.maximum(addr, pg * PAGE)
+            end = np.minimum(addr + size, (pg + 1) * PAGE)
+            np.add.at(acc, np.where(sel, pg, self.n_pages),
+                      np.where(sel, np.maximum(end - start, 0), 0))
+        touched = acc[:-1][acc[:-1] > 0]
+        return np.minimum(touched / PAGE, 1.0)
+
+    def rss_bytes(self) -> int:
+        """Resident bytes, honouring hugepage rounding in the HOT heap:
+        a 2 MiB run that crossed the occupancy threshold is counted fully
+        (it is mapped as one huge page)."""
+        base_rss = int(self.resident.sum()) * PAGE
+        lo = self.base[HOT] // PAGE
+        hi = (self.base[HOT] + self.cursor[HOT]) // PAGE + 1
+        hot_pages = self.resident[lo:hi]
+        per_huge = HUGE // PAGE
+        n_runs = len(hot_pages) // per_huge
+        if n_runs:
+            runs = hot_pages[:n_runs * per_huge].reshape(n_runs, per_huge)
+            occ = runs.mean(axis=1)
+            promoted = occ >= self.cfg.huge_occupancy
+            # promoted runs are counted fully; their sparse remainder is
+            # the THP-bloat term
+            bloat = int(((1 - runs[promoted].mean(axis=1)) *
+                         HUGE).sum()) if promoted.any() else 0
+            base_rss += bloat
+        return base_rss
+
+    def touched_bytes(self) -> int:
+        live = (self.heap >= 0) & self.access
+        return int(self.size[live].sum())
+
+    def overhead_ns(self) -> float:
+        return self.total_ns

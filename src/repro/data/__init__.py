@@ -1,0 +1,4 @@
+"""Data substrate: YCSB workloads + the ten data-structure access
+topologies (paper Table 1), the CrestKV driver, and the LM token pipeline."""
+from repro.data.ycsb import WORKLOADS, ZipfianKeys  # noqa: F401
+from repro.data.structures import STRUCTURES, make_structure  # noqa: F401

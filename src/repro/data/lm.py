@@ -1,0 +1,61 @@
+"""Synthetic LM token pipeline — deterministic, shardable, replayable.
+
+Tokens are drawn zipfian over the vocabulary (real corpora are zipfian —
+this is what makes embedding-row tiering representative) from a counter-
+based PRNG keyed on (seed, step, shard): any step of any shard can be
+regenerated independently, which is what makes the fault-tolerant trainer
+replay-exact after restore (runtime/trainer.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    zipf_theta: float = 1.1
+    seed: int = 0
+
+
+class TokenPipeline:
+    def __init__(self, cfg: DataConfig, shard: int = 0, num_shards: int = 1):
+        assert cfg.global_batch % num_shards == 0
+        self.cfg = cfg
+        self.shard = shard
+        self.num_shards = num_shards
+        self.local_batch = cfg.global_batch // num_shards
+        # zipfian inverse-CDF over the vocab (heavy head, long tail)
+        w = 1.0 / np.power(
+            np.arange(1, cfg.vocab_size + 1, dtype=np.float64),
+            cfg.zipf_theta)
+        cdf = np.cumsum(w)
+        self._cdf = jnp.asarray(cdf / cdf[-1], jnp.float32)
+        # scatter hot ids across the vocab (realistic id assignment)
+        self._scramble = jnp.asarray(
+            np.random.default_rng(cfg.seed).permutation(cfg.vocab_size))
+
+    def batch_at(self, step: int) -> Dict[str, jax.Array]:
+        """Deterministic batch for (step, shard) — replay-exact."""
+        cfg = self.cfg
+        key = jax.random.fold_in(
+            jax.random.fold_in(jax.random.PRNGKey(cfg.seed), step),
+            self.shard)
+        u = jax.random.uniform(key, (self.local_batch, cfg.seq_len + 1))
+        ranks = jnp.searchsorted(self._cdf, u)
+        toks = self._scramble[jnp.clip(ranks, 0, cfg.vocab_size - 1)]
+        return {"tokens": toks[:, :-1].astype(jnp.int32),
+                "labels": toks[:, 1:].astype(jnp.int32)}
+
+    def __iter__(self) -> Iterator[Dict[str, jax.Array]]:
+        step = 0
+        while True:
+            yield self.batch_at(step)
+            step += 1

@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the framework's compute hot-spots:
+
+  migrate          Object Collector data mover (scalar-prefetched
+                   gather/scatter through VMEM)
+  access_scan      collector table sweep (CIW update + MXU histogram)
+  paged_attention  decode through the object table, fused access bits
+  flash_attention  training/prefill attention (online softmax, SWA)
+  mamba_scan       selective-SSM recurrence (sequential-grid carry)
+
+`ops` holds the jit'd public wrappers; `ref` the pure-jnp oracles.
+Kernels run in interpret mode on CPU and compile natively on TPU.
+"""
+from repro.kernels import ops, ref  # noqa: F401

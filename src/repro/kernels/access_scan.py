@@ -1,0 +1,114 @@
+"""Pallas TPU kernel: `access_scan` — the Object Collector's table sweep.
+
+One memory-bound pass over the packed object-table words (paper §4: the
+collector "periodically scans a sparse bitmap"): unpack access/heap/ATC
+bits, update the CIW lanes, emit migration candidate masks, and build the
+per-superblock hot-object histogram the backends consume.
+
+TPU shape: the table is viewed as [rows, 128] uint32 lanes; the histogram
+is accumulated MXU-style — a one-hot [tile, n_sbs] matrix contracted with
+the access vector per tile — because scatter-add is not a TPU-native
+primitive but matmul accumulation is.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import object_table as ot
+
+LANE = 128
+
+# python-int copies of the packing constants (Pallas kernel bodies must
+# not capture traced jnp constants)
+_SLOT_MASK = (1 << ot.SLOT_BITS) - 1
+_HEAP_MASK = (1 << ot.HEAP_BITS) - 1
+_ATC_MASK = (1 << ot.ATC_BITS) - 1
+_CIW_MASK = (1 << ot.CIW_BITS) - 1
+
+
+def _kernel(ct_ref, sbslots_ref, table_ref, new_table_ref, to_hot_ref,
+            to_cold_ref, hist_ref):
+    i = pl.program_id(0)
+    w = table_ref[...]                       # [rows_tile, 128] uint32
+    live = ((w >> ot.HEAP_SHIFT) & _HEAP_MASK) != ot.FREE
+    acc = (((w >> ot.ACCESS_SHIFT) & 1) == 1) & live
+    atc = (w >> ot.ATC_SHIFT) & _ATC_MASK
+    heap = (w >> ot.HEAP_SHIFT) & _HEAP_MASK
+    ciw = (w >> ot.CIW_SHIFT) & _CIW_MASK
+    ciw = jnp.where(acc, jnp.uint32(0),
+                    jnp.minimum(ciw + 1, jnp.uint32(ot.CIW_SAT)))
+    ciw = jnp.where(live, ciw, jnp.uint32(0))
+
+    ct = ct_ref[0]
+    movable = live & (atc == 0)
+    to_hot = acc & ((heap == ot.NEW) | (heap == ot.COLD)) & movable
+    to_cold = (~acc) & (ciw > ct) & ((heap == ot.NEW) | (heap == ot.HOT)) \
+        & movable
+
+    new_table_ref[...] = (w & ~jnp.uint32(_CIW_MASK << ot.CIW_SHIFT)) | \
+        (ciw << ot.CIW_SHIFT)
+    to_hot_ref[...] = to_hot.astype(jnp.int32)
+    to_cold_ref[...] = to_cold.astype(jnp.int32)
+
+    # per-superblock hot histogram via one-hot contraction (MXU-friendly)
+    n_sbs = hist_ref.shape[-1]
+    sb = ((w >> ot.SLOT_SHIFT) & _SLOT_MASK) // sbslots_ref[0]
+    flat_sb = sb.reshape(-1).astype(jnp.int32)          # [tile]
+    flat_acc = acc.reshape(-1).astype(jnp.float32)      # [tile]
+    onehot = (flat_sb[:, None] ==
+              jax.lax.broadcasted_iota(jnp.int32, (flat_sb.shape[0], n_sbs),
+                                       1)).astype(jnp.float32)
+    contrib = jnp.dot(flat_acc[None, :], onehot,
+                      preferred_element_type=jnp.float32)  # [1, n_sbs]
+
+    @pl.when(i == 0)
+    def _init():
+        hist_ref[...] = jnp.zeros_like(hist_ref)
+    hist_ref[...] += contrib.astype(jnp.int32)
+
+
+def access_scan_pallas(table: jax.Array, ciw_threshold: jax.Array,
+                       sb_slots: int, n_sbs: int, *, rows_tile: int = 64,
+                       interpret: bool = True):
+    """table: [N] uint32 (N % 128 == 0). Returns (new_table [N],
+    to_hot [N] int32, to_cold [N] int32, hist [n_sbs] int32)."""
+    n = table.shape[0]
+    assert n % LANE == 0, f"table len {n} not lane-aligned"
+    rows = n // LANE
+    rows_tile = min(rows_tile, rows)
+    assert rows % rows_tile == 0
+    t2 = table.reshape(rows, LANE)
+    ct = jnp.reshape(ciw_threshold.astype(jnp.uint32), (1,))
+    sbs = jnp.full((1,), sb_slots, jnp.uint32)
+
+    grid = (rows // rows_tile,)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[pl.BlockSpec((rows_tile, LANE), lambda i, ct, sbs: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((rows_tile, LANE), lambda i, ct, sbs: (i, 0)),
+            pl.BlockSpec((rows_tile, LANE), lambda i, ct, sbs: (i, 0)),
+            pl.BlockSpec((rows_tile, LANE), lambda i, ct, sbs: (i, 0)),
+            pl.BlockSpec((1, n_sbs), lambda i, ct, sbs: (0, 0)),
+        ],
+    )
+    fn = pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, LANE), jnp.uint32),
+            jax.ShapeDtypeStruct((rows, LANE), jnp.int32),
+            jax.ShapeDtypeStruct((rows, LANE), jnp.int32),
+            jax.ShapeDtypeStruct((1, n_sbs), jnp.int32),
+        ],
+        interpret=interpret,
+    )
+    new_t, to_hot, to_cold, hist = fn(ct, sbs, t2)
+    return (new_t.reshape(n), to_hot.reshape(n), to_cold.reshape(n),
+            hist[0])

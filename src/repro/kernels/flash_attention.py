@@ -1,0 +1,98 @@
+"""Pallas TPU kernel: `flash_attention` — tiled online-softmax attention
+(training / prefill), causal with optional sliding window.
+
+Grid: (batch*heads, Sq/BQ, Sk/BK) — the KV axis is innermost so the
+(m, l, acc) accumulators live in VMEM scratch across KV steps and the
+output tile is written once on the last step. Block shapes are
+MXU-aligned (128 multiples); softmax runs in fp32, output is cast back.
+GQA is handled in ops.py by mapping each q-head group to its kv head.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.3819763e38
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, causal: bool, window: int, bq: int, bk: int,
+            n_k_steps: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32) * scale        # [BQ, D]
+    k = k_ref[0].astype(jnp.float32)                # [BK, D]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # [BQ, BK]
+
+    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = jnp.ones((bq, bk), jnp.bool_)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]                              # [BQ, 1]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)                           # [BQ, BK]
+    scale_prev = jnp.exp(m_prev - m_new)             # [BQ, 1]
+    l_scr[...] = l_scr[...] * scale_prev + jnp.sum(p, -1, keepdims=True)
+    m_scr[...] = m_new
+    pv = jax.lax.dot_general(p, v_ref[0].astype(jnp.float32),
+                             (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    acc_scr[...] = acc_scr[...] * scale_prev + pv
+
+    @pl.when(ki == n_k_steps - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           causal: bool = True, window: int = 0,
+                           bq: int = 128, bk: int = 128,
+                           scale: float = None,
+                           interpret: bool = True) -> jax.Array:
+    """q/k/v: [BH, S, D] (one kv head per q head — GQA expanded by the
+    wrapper). D and S must be 128-multiples (wrapper pads); `scale` is
+    the softmax scale of the UNPADDED head dim."""
+    bh, s, d = q.shape
+    bq = min(bq, s)
+    bk = min(bk, s)
+    assert s % bq == 0 and s % bk == 0 and d % 128 == 0
+    n_k = s // bk
+    grid = (bh, s // bq, n_k)
+    kern = functools.partial(
+        _kernel, scale=scale if scale is not None else d ** -0.5,
+        causal=causal, window=window, bq=bq, bk=bk, n_k_steps=n_k)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

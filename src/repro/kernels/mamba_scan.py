@@ -1,0 +1,74 @@
+"""Pallas TPU kernel: `mamba_scan` — the selective-SSM recurrence
+h_t = a_t * h_{t-1} + b_t (falcon-mamba / zamba2 hot loop).
+
+Grid: (batch, channel_tiles, seq_chunks) — the sequence axis is the
+innermost (sequential) grid dimension, so the carry state h lives in VMEM
+scratch across chunk steps. Each step loads an [chunk, CT, N] tile of
+(a, b), runs the recurrence with an unrolled fori_loop (elementwise VPU
+work — no MXU here, this kernel is bandwidth-bound), and streams out the
+same-shaped h tile.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(a_ref, b_ref, h0_ref, h_ref, hlast_ref, h_scr, *,
+            chunk: int, n_chunks: int):
+    s = pl.program_id(2)
+
+    @pl.when(s == 0)
+    def _init():
+        h_scr[...] = h0_ref[0]
+
+    a = a_ref[0].astype(jnp.float32)   # [chunk, CT, N]
+    b = b_ref[0].astype(jnp.float32)
+
+    def step(t, h):
+        h = a[t] * h + b[t]
+        h_ref[0, t] = h.astype(h_ref.dtype)
+        return h
+    h = jax.lax.fori_loop(0, chunk, step, h_scr[...])
+    h_scr[...] = h
+
+    @pl.when(s == n_chunks - 1)
+    def _finish():
+        hlast_ref[0] = h.astype(hlast_ref.dtype)
+
+
+def mamba_scan_pallas(a: jax.Array, b: jax.Array, h0: jax.Array, *,
+                      chunk: int = 64, ct: int = 8,
+                      interpret: bool = True):
+    """a, b: [B, S, C, N] (N % 128 == 0 after wrapper padding);
+    h0: [B, C, N]. Returns (h_all [B,S,C,N] fp32, h_last [B,C,N] fp32)."""
+    bsz, s, c, n = a.shape
+    chunk = min(chunk, s)
+    ct = min(ct, c)
+    assert s % chunk == 0 and c % ct == 0
+    n_chunks = s // chunk
+    grid = (bsz, c // ct, n_chunks)
+    kern = functools.partial(_kernel, chunk=chunk, n_chunks=n_chunks)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, ct, n), lambda i, j, sc: (i, sc, j, 0)),
+            pl.BlockSpec((1, chunk, ct, n), lambda i, j, sc: (i, sc, j, 0)),
+            pl.BlockSpec((1, ct, n), lambda i, j, sc: (i, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, ct, n), lambda i, j, sc: (i, sc, j, 0)),
+            pl.BlockSpec((1, ct, n), lambda i, j, sc: (i, j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, s, c, n), jnp.float32),
+            jax.ShapeDtypeStruct((bsz, c, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((ct, n), jnp.float32)],
+        interpret=interpret,
+    )(a, b, h0)

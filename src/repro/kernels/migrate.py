@@ -1,0 +1,64 @@
+"""Pallas TPU kernel: `migrate` — the Object Collector's data mover.
+
+The paper's hot loop when tidying: copy object payloads from their old
+slots to their new (dense) slots. On TPU this is a batched indirection
+copy through VMEM: move indices are *scalar-prefetched* so the index math
+runs ahead of the data DMAs (PrefetchScalarGridSpec), each grid step
+streams one [1, W_TILE] tile HBM->VMEM->HBM, and the pool array is
+aliased in/out so unmoved slots cost nothing.
+
+In-place safety contract (enforced by callers, asserted in ops.py):
+either (a) src and dst slot sets are disjoint (cross-heap migration:
+dst slots are free), or (b) moves are sorted so dst[i] <= src[i]
+(left-packing compaction) — grid steps run in ascending move order, so
+no move reads a slot a previous move overwrote.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+LANE = 128  # TPU lane width; slot payload is padded to a multiple
+
+
+def _kernel(idx_ref, data_ref, out_ref):
+    # idx_ref is the scalar-prefetch ref (unused in the body: the gather/
+    # scatter happens in the index_maps); the body is a pure VMEM copy.
+    out_ref[...] = data_ref[...]
+
+
+def migrate_pallas(data: jax.Array, src: jax.Array, dst: jax.Array,
+                   *, w_tile: int = 512, interpret: bool = True
+                   ) -> jax.Array:
+    """data: [n_slots, W] (W % 128 == 0), src/dst: [n_moves] int32.
+    Returns data with data[dst[i]] = data[src[i]] applied in move order.
+    Self-moves (src == dst) are no-ops (used to encode masked-out moves).
+    """
+    n_slots, w = data.shape
+    n_moves = src.shape[0]
+    assert w % LANE == 0, f"slot width {w} not lane-aligned"
+    w_tile = min(w_tile, w)
+    assert w % w_tile == 0
+    idx = jnp.stack([src, dst], axis=0).astype(jnp.int32)  # [2, n_moves]
+
+    grid = (n_moves, w // w_tile)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, w_tile),
+                               lambda i, j, idx: (idx[0, i], j))],
+        out_specs=pl.BlockSpec((1, w_tile),
+                               lambda i, j, idx: (idx[1, i], j)),
+    )
+    fn = pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(data.shape, data.dtype),
+        input_output_aliases={1: 0},   # pool array aliased in/out
+        interpret=interpret,
+    )
+    return fn(idx, data)

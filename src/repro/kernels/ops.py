@@ -1,0 +1,148 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+Each wrapper: validates/normalizes shapes (lane padding, GQA expansion),
+selects interpret mode (Pallas kernels execute in interpret mode on CPU —
+this container — and compile natively on TPU), and matches the ref.py
+oracle bit-for-bit on the unpadded region.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import access_scan as _scan
+from repro.kernels import flash_attention as _fa
+from repro.kernels import mamba_scan as _ms
+from repro.kernels import migrate as _mig
+from repro.kernels import paged_attention as _pa
+
+LANE = 128
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jax.Array, mult: int, axis: int) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+# ---------------------------------------------------------------------------
+# migrate
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("w_tile",))
+def migrate(data: jax.Array, src: jax.Array, dst: jax.Array,
+            ok: jax.Array, *, w_tile: int = 512) -> jax.Array:
+    """data: [n_slots, W]; src/dst/ok: [n_moves]. Masked moves (ok=False)
+    become self-copies. Caller contract: disjoint src/dst sets OR
+    left-packing order (see migrate.py)."""
+    w = data.shape[1]
+    dst_eff = jnp.where(ok, dst, src).astype(jnp.int32)
+    padded = _pad_to(data, LANE, axis=1)
+    out = _mig.migrate_pallas(padded, src.astype(jnp.int32), dst_eff,
+                              w_tile=min(w_tile, padded.shape[1]),
+                              interpret=_interpret())
+    return out[:, :w]
+
+
+# ---------------------------------------------------------------------------
+# access_scan
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("sb_slots", "n_sbs"))
+def access_scan(table: jax.Array, ciw_threshold: jax.Array, *,
+                sb_slots: int, n_sbs: int):
+    """table: [N] uint32. Returns (new_table, to_hot bool, to_cold bool,
+    hist [n_sbs] int32)."""
+    n = table.shape[0]
+    padded = _pad_to(table, LANE, axis=0)  # pad words are FREE=0b? pad=0
+    # pad words decode as heap=NEW,slot=0,access=0 -> not live? heap 0 is
+    # NEW; guard: set pad words to FREE so they never classify.
+    if padded.shape[0] != n:
+        from repro.core import object_table as ot
+        pad_word = ot.free_word()
+        padded = padded.at[n:].set(pad_word)
+    new_t, to_hot, to_cold, hist = _scan.access_scan_pallas(
+        padded, ciw_threshold, sb_slots, n_sbs, interpret=_interpret())
+    return (new_t[:n], to_hot[:n].astype(bool), to_cold[:n].astype(bool),
+            hist)
+
+
+# ---------------------------------------------------------------------------
+# flash_attention
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("causal", "window", "bq", "bk"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    bq: int = 128, bk: int = 128) -> jax.Array:
+    """q: [B,S,H,D]; k/v: [B,S,KV,D] -> [B,S,H,D]. GQA expanded here;
+    D padded to 128 lanes; S must divide by the block sizes (bq/bk are
+    clipped to S)."""
+    b, s, h, d = q.shape
+    kv = k.shape[2]
+    rep = h // kv
+    # expand kv heads to q heads, fold heads into batch
+    k_e = jnp.repeat(k, rep, axis=2)
+    v_e = jnp.repeat(v, rep, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    kf = k_e.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    vf = v_e.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    qf = _pad_to(qf, LANE, 2)
+    kf = _pad_to(kf, LANE, 2)
+    vf = _pad_to(vf, LANE, 2)
+    out = _fa.flash_attention_pallas(qf, kf, vf, causal=causal,
+                                     window=window, bq=bq, bk=bk,
+                                     scale=d ** -0.5,
+                                     interpret=_interpret())
+    out = out[:, :, :d].reshape(b, h, s, d).transpose(0, 2, 1, 3)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# paged_attention
+# ---------------------------------------------------------------------------
+@jax.jit
+def paged_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                    block_tables: jax.Array, seq_lens: jax.Array
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """q: [B,H,D]; k_pages/v_pages: [n_slots, bt, KV, D];
+    block_tables: [B, MB]; seq_lens: [B].
+    Returns (out [B,H,D], touched [B,MB] bool)."""
+    b, h, d = q.shape
+    kv = k_pages.shape[2]
+    rep = h // kv
+    qg = q.reshape(b, kv, rep, d)
+    qg = _pad_to(qg, LANE, 3)
+    kp = _pad_to(k_pages, LANE, 3)
+    vp = _pad_to(v_pages, LANE, 3)
+    out, touched = _pa.paged_attention_pallas(
+        qg, kp, vp, block_tables, seq_lens, scale=d ** -0.5,
+        interpret=_interpret())
+    out = out[..., :d].reshape(b, h, d)
+    return out, touched.astype(bool)
+
+
+# ---------------------------------------------------------------------------
+# mamba_scan
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("chunk", "ct"))
+def mamba_scan(a: jax.Array, b: jax.Array, h0: jax.Array, *,
+               chunk: int = 64, ct: int = 8):
+    """a,b: [B,S,C,N]; h0: [B,C,N] -> (h_all fp32, h_last fp32)."""
+    n = a.shape[-1]
+    ap = _pad_to(a.astype(jnp.float32), LANE, 3)
+    bp = _pad_to(b.astype(jnp.float32), LANE, 3)
+    h0p = _pad_to(h0.astype(jnp.float32), LANE, 2)
+    # pad a with 1s would corrupt? a-pad lanes multiply zeros of h0/b: all
+    # padded lanes stay 0 regardless of a's pad value (h0,b pads are 0).
+    h_all, h_last = _ms.mamba_scan_pallas(ap, bp, h0p, chunk=chunk, ct=ct,
+                                          interpret=_interpret())
+    return h_all[..., :n], h_last[..., :n]

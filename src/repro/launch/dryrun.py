@@ -1,0 +1,345 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware: the full
+published config is lowered against ShapeDtypeStruct inputs (no
+allocation), compiled for the production mesh, and the compiled
+artifact's memory/cost analysis + collective schedule are recorded for
+the roofline (EXPERIMENTS.md §Dry-run / §Roofline).
+
+Usage:
+    python -m repro.launch.dryrun --arch mixtral-8x7b --shape train_4k
+    python -m repro.launch.dryrun --all                  # 40-cell sweep
+    python -m repro.launch.dryrun --all --multi-pod      # 512-chip mesh
+"""
+# The dry-run (and ONLY the dry-run) fakes 512 host devices so
+# jax.make_mesh can build the production mesh. MUST precede any jax
+# import (jax locks the device count on first init).
+import os
+if "--real-devices" not in os.sys.argv:  # noqa: E402
+    os.environ["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count=512 "
+        + os.environ.get("XLA_FLAGS", ""))
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import re            # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import get_config, list_archs           # noqa: E402
+from repro.configs.shapes import SHAPES, SHAPE_ORDER, applicable  # noqa: E402
+from repro.launch import shardings as sh                    # noqa: E402
+from repro.launch.mesh import make_production_mesh          # noqa: E402
+from repro.models.model import Model                        # noqa: E402
+from repro.optim import adamw                               # noqa: E402
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8,
+                "s32": 4, "u64": 8, "u32": 4, "s16": 2, "u16": 2,
+                "s8": 1, "u8": 1, "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def collective_bytes(hlo_text: str):
+    """Sum operand bytes of every collective op in the (post-SPMD) HLO.
+    Returns (total_bytes, per_op_kind dict, op_count)."""
+    shape_re = re.compile(r"\b(\w+)\[([\d,]*)\]")
+    per_kind = {k: 0 for k in _COLLECTIVES}
+    count = 0
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(?:\([^=]*\)|\S+)\s+"
+                     r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+                     r"collective-permute)(?:-start|-done)?\(", s)
+        if not m:
+            continue
+        kind = m.group(1)
+        if "-done(" in s:
+            continue  # counted at -start
+        count += 1
+        args = s[s.index("(", s.index(kind)):]
+        for dt, dims in shape_re.findall(args):
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            per_kind[kind] += n * _DTYPE_BYTES[dt]
+    total = sum(per_kind.values())
+    return total, per_kind, count
+
+
+def build_step(model: Model, shape_name: str, mesh, variant: str = ""):
+    """Returns (fn, arg_specs tuple, in_shardings tuple)."""
+    cfg = model.cfg
+    spec = SHAPES[shape_name]
+    params_shape = model.param_specs()
+    p_sh = sh.param_shardings(mesh, params_shape, variant)
+
+    if spec.mode == "train":
+        opt_shape = jax.eval_shape(adamw.adamw_init, params_shape)
+        o_sh = sh.opt_shardings(mesh, opt_shape, p_sh, params_shape,
+                                variant)
+        batch_shape = model.input_specs(spec)
+        b_sh = sh.batch_shardings(mesh, batch_shape)
+        opt_cfg = adamw.AdamWConfig()
+
+        def train_step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(
+                lambda p: model.loss(p, batch)[0])(params)
+            params, opt_state, metrics = adamw.adamw_update(
+                opt_cfg, params, grads, opt_state)
+            return params, opt_state, loss
+        return train_step, (params_shape, opt_shape, batch_shape), \
+            (p_sh, o_sh, b_sh)
+
+    if spec.mode == "prefill":
+        batch_shape = model.input_specs(spec)
+        b_sh = sh.batch_shardings(mesh, batch_shape)
+
+        def prefill_step(params, batch):
+            return model.prefill(params, batch)
+        return prefill_step, (params_shape, batch_shape), (p_sh, b_sh)
+
+    # decode: one new token against a seq_len KV cache
+    batch_shape = model.input_specs(spec)
+    state_shape = batch_shape.pop("state")
+    s_sh = sh.decode_state_shardings(mesh, state_shape, cfg, variant)
+    b_sh = sh.batch_shardings(mesh, batch_shape)
+
+    def serve_step(params, state, batch):
+        logits, new_state = model.decode_step(params, state,
+                                              batch["tokens"])
+        return logits, new_state
+    return serve_step, (params_shape, state_shape, batch_shape), \
+        (p_sh, s_sh, b_sh)
+
+
+def probe_config(cfg, n_units: int):
+    """A config with `n_units` repeating units (layers / zamba groups /
+    enc+dec layer pairs) — used to extract per-unit cost terms."""
+    import dataclasses as dc
+    from repro.configs.base import MAMBA2, SHARED_ATTN
+    if cfg.family == "hybrid":
+        every = cfg.shared_attn_every
+        nl = every * n_units
+        pattern = tuple(SHARED_ATTN if (i + 1) % every == 0 else MAMBA2
+                        for i in range(nl))
+        return dc.replace(cfg, num_layers=nl, block_pattern=pattern)
+    if cfg.is_encoder_decoder:
+        return dc.replace(cfg, num_layers=n_units,
+                          num_encoder_layers=n_units)
+    return dc.replace(cfg, num_layers=n_units)
+
+
+def n_units_of(cfg) -> int:
+    if cfg.family == "hybrid":
+        return cfg.num_layers // cfg.shared_attn_every
+    return cfg.num_layers   # enc-dec: num_layers == num_encoder_layers
+
+
+def _compile_cost(cfg, shape_name, mesh, remat, unroll, variant=""):
+    """Compile one variant; return (flops, bytes, coll_total, coll_kinds,
+    coll_ops, memory_analysis)."""
+    from jax.sharding import PartitionSpec as P
+    from repro.models import moe as moe_lib
+    from repro.models import transformer as T
+    T.set_scan_unroll(unroll)
+    if variant == "moe_hints":
+        moe_lib.set_sharding_hints({
+            "dispatch": P(None, "data", None),
+            "hidden": P(None, "data", "model")})
+    else:
+        moe_lib.set_sharding_hints(None)
+    model = Model(cfg, attn_impl="blockwise",
+                  remat=remat if SHAPES[shape_name].mode == "train"
+                  else "none")
+    fn, arg_shapes, in_sh = build_step(model, shape_name, mesh, variant)
+    with mesh:
+        compiled = jax.jit(fn, in_shardings=in_sh).lower(
+            *arg_shapes).compile()
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+    coll_total, coll_kinds, coll_ops = collective_bytes(hlo)
+    return (float(cost.get("flops", 0.0)),
+            float(cost.get("bytes accessed", 0.0)),
+            coll_total, coll_kinds, coll_ops, mem)
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             remat: str = "dots", out_dir: str = "experiments/dryrun",
+             probe: bool = True, variant: str = "",
+             expert_gather: bool = False, kv_bits: int = 16):
+    """One (arch x shape x mesh) cell.
+
+    The production program keeps layers under lax.scan (small HLO, fast
+    compile); XLA's cost model counts a while body ONCE, so scanned
+    FLOPs/bytes/collectives would be ~L x under-reported. We therefore
+    compile the rolled full config for memory_analysis (that IS the
+    production binary), plus two UNROLLED probes at 1 and 2 units, and
+    extrapolate cost terms linearly: total = f1 + (N-1) * (f2 - f1) —
+    exact for homogeneous stacks (all assigned archs are).
+    """
+    import dataclasses as _dc
+    cfg = get_config(arch)
+    if expert_gather or kv_bits != 16:
+        cfg = _dc.replace(cfg, hades=_dc.replace(
+            cfg.hades, expert_gather_decode=expert_gather,
+            kv_quant_bits=kv_bits))
+    ok, why = applicable(cfg, shape_name)
+    mesh_name = "pod512" if multi_pod else "pod256"
+    tag = f"_{variant}" if variant else ""
+    tag += "_eg" if expert_gather else ""
+    tag += f"_kv{kv_bits}" if kv_bits != 16 else ""
+    cell = f"{arch}_{shape_name}_{mesh_name}{tag}"
+    if not ok:
+        print(f"[skip] {cell}: {why}")
+        return {"cell": cell, "skipped": why}
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+
+    # 1) rolled, full config — the production binary; memory must fit.
+    (f_roll, b_roll, c_roll, ck_roll, co_roll, mem) = _compile_cost(
+        cfg, shape_name, mesh, remat, unroll=False, variant=variant)
+
+    # analytic per-device argument bytes (exact: global leaf size /
+    # product of mesh-axis factors in its sharding) — params + opt state
+    # + decode caches; proves the state fits HBM independent of the CPU
+    # backend's (unreliable) temp accounting.
+    model_full = Model(cfg)
+    _, arg_shapes_full, in_sh_full = build_step(model_full, shape_name,
+                                                mesh, variant)
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def leaf_bytes(leaf, sharding):
+        n = 1
+        for s in leaf.shape:
+            n *= s
+        n *= jnp.dtype(leaf.dtype).itemsize
+        denom = 1
+        spec = getattr(sharding, "spec", None)
+        if spec is not None:
+            for entry in spec:
+                if entry is None:
+                    continue
+                for ax in ((entry,) if isinstance(entry, str) else entry):
+                    denom *= axis_sizes.get(ax, 1)
+        return n / denom
+
+    arg_analytic = 0.0
+    for tree, shs in zip(arg_shapes_full, in_sh_full):
+        leaves = jax.tree.leaves(tree)
+        sh_leaves = jax.tree.leaves(shs,
+                                    is_leaf=lambda x: hasattr(x, "spec"))
+        for leaf, s in zip(leaves, sh_leaves):
+            arg_analytic += leaf_bytes(leaf, s)
+
+    result = {
+        "cell": cell, "arch": arch, "shape": shape_name,
+        "mesh": list(mesh.devices.shape), "chips": n_chips,
+        "variant": variant, "expert_gather": expert_gather,
+        "kv_bits": kv_bits,
+        "mode": SHAPES[shape_name].mode,
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+        "tokens": SHAPES[shape_name].global_batch *
+        (SHAPES[shape_name].seq_len
+         if SHAPES[shape_name].mode != "decode" else 1),
+        "flops_rolled": f_roll, "bytes_rolled": b_roll,
+        "collective_bytes_rolled": c_roll,
+        "arg_bytes_per_device_analytic": arg_analytic,
+    }
+    for attr in ("temp_size_in_bytes", "argument_size_in_bytes",
+                 "output_size_in_bytes", "peak_memory_in_bytes"):
+        v = getattr(mem, attr, None)
+        if v is not None:
+            result[attr] = int(v)
+
+    # 2) unrolled probes at 1 and 2 units -> linear extrapolation.
+    if probe:
+        nu = n_units_of(cfg)
+        f1, b1, c1, k1, o1, _ = _compile_cost(
+            probe_config(cfg, 1), shape_name, mesh, remat, unroll=True,
+            variant=variant)
+        f2, b2, c2, k2, o2, _ = _compile_cost(
+            probe_config(cfg, 2), shape_name, mesh, remat, unroll=True,
+            variant=variant)
+        result.update(
+            n_units=nu,
+            flops=f1 + (nu - 1) * (f2 - f1),
+            bytes_accessed=b1 + (nu - 1) * (b2 - b1),
+            collective_bytes=c1 + (nu - 1) * (c2 - c1),
+            collective_ops=o1 + (nu - 1) * (o2 - o1),
+            collective_kinds={k: k1[k] + (nu - 1) * (k2[k] - k1[k])
+                              for k in k1},
+            probe={"f1": f1, "f2": f2, "b1": b1, "b2": b2,
+                   "c1": c1, "c2": c2})
+    result["compile_s"] = round(time.time() - t0, 1)
+
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, cell + ".json"), "w") as f:
+        json.dump(result, f, indent=1)
+    msg = (f"[ok] {cell}: compile {result['compile_s']}s, "
+           f"args ~{arg_analytic/2**30:.2f} GiB/dev")
+    if probe:
+        msg += (f", flops {result['flops']:.3e}, "
+                f"bytes {result['bytes_accessed']:.3e}, "
+                f"coll {result['collective_bytes']:.3e}")
+    print(msg)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--remat", default="dots")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--variant", default="")
+    ap.add_argument("--expert-gather", action="store_true")
+    ap.add_argument("--kv-bits", type=int, default=16)
+    ap.add_argument("--real-devices", action="store_true")
+    args = ap.parse_args()
+
+    archs = list_archs() if (args.all or args.arch is None) \
+        else [args.arch]
+    shapes = SHAPE_ORDER if (args.all or args.shape is None) \
+        else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    failures = []
+    for mp in meshes:
+        for arch in archs:
+            for shp in shapes:
+                try:
+                    # probes (cost extrapolation) only feed the roofline,
+                    # which is single-pod; multi-pod is the shard-proof.
+                    run_cell(arch, shp, multi_pod=mp, remat=args.remat,
+                             out_dir=args.out, probe=not mp,
+                             variant=args.variant,
+                             expert_gather=args.expert_gather,
+                             kv_bits=args.kv_bits)
+                except Exception as e:  # noqa: BLE001
+                    failures.append((arch, shp, mp, repr(e)))
+                    print(f"[FAIL] {arch} {shp} multi_pod={mp}: {e}")
+                    traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print("  ", f)
+        raise SystemExit(1)
+    print("\nall cells compiled.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,240 @@
+"""Sharding rules: param / optimizer / batch / decode-state PartitionSpecs
+for every architecture, derived from leaf paths + shapes.
+
+Scheme (DESIGN.md §3.3):
+  * 2-D weight sharding = FSDP over "data" x TP over "model". Every large
+    matrix shards its TP axis (heads / d_ff / experts / vocab) over
+    "model" and its other big axis over "data" (ZeRO-3-style); XLA SPMD
+    inserts the all-gathers. Tensors whose dims don't divide are left
+    replicated on that axis (MQA kv projections, tiny norms).
+  * The "pod" axis carries pure data parallelism: params are NOT sharded
+    over pods (cross-pod all-gathers would cross DCI); the batch is.
+  * Decode KV caches shard batch over "data" and cache length over
+    "model" (kv-head counts rarely divide 16; sequence does) — softmax
+    over the sharded length lowers to a psum, flash-decoding style.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+
+def _div(n: int, size: int) -> bool:
+    return n > 0 and size > 0 and n % size == 0
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return dict(mesh.shape).get(name, 1)   # works for AbstractMesh too
+
+
+def param_spec(mesh: Mesh, path: str, shape: Tuple[int, ...],
+               variant: str = "") -> P:
+    """PartitionSpec for one parameter leaf. Paths look like
+    layers/wq, layers/moe/wi, mamba/m/in_proj, embed, out, ...
+    Stacked-per-layer leaves have a leading L dim (never sharded).
+
+    §Perf variants:
+      "moe_zero"  — MoE expert weights TP-only on F (contraction dim
+                    unsharded -> no activation-sized partial-sum
+                    all-reduces); optimizer state stays 2-D (ZeRO).
+      "serve_tp"  — decode-only: 256-way TP over ("data","model") on
+                    every output dim (batch≈1 leaves "data" idle).
+    """
+    dsz = _axis_size(mesh, "data")
+    msz = _axis_size(mesh, "model")
+    name = path.split("/")[-1]
+    # drop leading stacked-layer dims (layers are scanned): we only shard
+    # the trailing matrix dims
+    nd = len(shape)
+
+    def spec(*trailing):
+        return P(*([None] * (nd - len(trailing)) + list(trailing)))
+
+    if variant == "serve_tp":
+        both = dsz * msz
+
+        def tp(out_axis_last: bool):
+            a, b = shape[-2:]
+            out, other = (b, a) if out_axis_last else (a, b)
+            if out % both == 0:
+                e = ("data", "model")
+            elif out % msz == 0:
+                e = "model"
+            else:
+                return P()
+            return spec(None, e) if out_axis_last else spec(e, None)
+
+        if name in ("wq", "wk", "wv", "xq", "xv", "xk", "wi", "wg",
+                    "in_proj", "x_proj", "dt_proj"):
+            if "moe" in path:
+                _, d, f = shape[-3:]
+                if f % both == 0:
+                    return spec(None, None, ("data", "model"))
+                return spec(None, None,
+                            "model" if f % msz == 0 else None)
+            return tp(out_axis_last=True)
+        if name in ("wo", "xo", "out_proj"):
+            if "moe" in path:
+                _, f, d = shape[-3:]
+                if f % both == 0:
+                    return spec(None, ("data", "model"), None)
+                return spec(None,
+                            "model" if f % msz == 0 else None, None)
+            return tp(out_axis_last=False)
+        if name == "embed":
+            v, d = shape
+            return P(("data", "model") if v % both == 0 else
+                     ("model" if v % msz == 0 else None), None)
+        if name == "out":
+            d, v = shape
+            return P(None, ("data", "model") if v % both == 0 else
+                     ("model" if v % msz == 0 else None))
+        return P()
+
+    if variant == "moe_zero" and "moe" in path:
+        if name in ("wi", "wg"):
+            e, d, f = shape[-3:]
+            return spec(None, None, "model" if _div(f, msz) else None)
+        if name == "wo":
+            e, f, d = shape[-3:]
+            return spec(None, "model" if _div(f, msz) else None, None)
+
+    if name in ("ln", "ln1", "ln2", "ln_x", "final_ln", "enc_ln", "norm",
+                "conv_b", "dt_bias", "D", "A_log", "conv_w"):
+        return P()
+    if name == "router":
+        return P()
+    if name in ("embed",):
+        v, d = shape
+        return P("model" if _div(v, msz) else None,
+                 "data" if _div(d, dsz) else None)
+    if name == "out":
+        d, v = shape
+        return P("data" if _div(d, dsz) else None,
+                 "model" if _div(v, msz) else None)
+    if name in ("wq", "wk", "wv", "xq", "xk", "xv"):
+        d, e = shape[-2:]
+        return spec("data" if _div(d, dsz) else None,
+                    "model" if _div(e, msz) else None)
+    if name in ("wo", "xo") and nd >= 2 and "moe" not in path:
+        e, d = shape[-2:]
+        return spec("model" if _div(e, msz) else None,
+                    "data" if _div(d, dsz) else None)
+    if "moe" in path and name in ("wi", "wg"):
+        e, d, f = shape[-3:]
+        if _div(e, msz):
+            return spec("model", "data" if _div(d, dsz) else None, None)
+        return spec(None, "data" if _div(d, dsz) else None,
+                    "model" if _div(f, msz) else None)
+    if "moe" in path and name == "wo":
+        e, f, d = shape[-3:]
+        if _div(e, msz):
+            return spec("model", None, "data" if _div(d, dsz) else None)
+        return spec(None, "model" if _div(f, msz) else None,
+                    "data" if _div(d, dsz) else None)
+    if name in ("wi", "wg"):                      # dense ffn
+        d, f = shape[-2:]
+        return spec("data" if _div(d, dsz) else None,
+                    "model" if _div(f, msz) else None)
+    if name == "wo":                              # dense ffn out
+        f, d = shape[-2:]
+        return spec("model" if _div(f, msz) else None,
+                    "data" if _div(d, dsz) else None)
+    if name in ("in_proj", "x_proj", "dt_proj", "out_proj"):
+        a, b = shape[-2:]
+        return spec("data" if _div(a, dsz) else None,
+                    "model" if _div(b, msz) else None)
+    return P()
+
+
+def param_shardings(mesh: Mesh, params_shape: Any,
+                    variant: str = "") -> Any:
+    """NamedSharding tree matching a params shape tree (eval_shape out)."""
+    def one(path, leaf):
+        pstr = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        return NamedSharding(mesh, param_spec(mesh, pstr, leaf.shape,
+                                              variant))
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def opt_shardings(mesh: Mesh, opt_shape: Any, params_sh: Any,
+                  params_shape: Any = None, variant: str = "") -> Any:
+    """Optimizer m/v inherit the param shardings; step is replicated.
+    Under "moe_zero" m/v keep the BASELINE 2-D shards (ZeRO: the update
+    resharding is a weights-sized reduce-scatter/all-gather instead of
+    activation-sized partial-sum all-reduces)."""
+    mv_sh = params_sh
+    if variant == "moe_zero" and params_shape is not None:
+        mv_sh = param_shardings(mesh, params_shape, variant="")
+    return {
+        "m": mv_sh, "v": mv_sh,
+        "step": NamedSharding(mesh, P()),
+    }
+
+
+def batch_spec(mesh: Mesh, ndim: int) -> P:
+    """Batch arrays: leading dim over (pod, data)."""
+    axes = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    return P(axes, *([None] * (ndim - 1)))
+
+
+def batch_shardings(mesh: Mesh, batch_shape: Any) -> Any:
+    def one(leaf):
+        dims = dict(zip(mesh.axis_names, mesh.devices.shape))
+        total = dims.get("pod", 1) * dims.get("data", 1)
+        if leaf.ndim >= 1 and leaf.shape[0] % total == 0:
+            return NamedSharding(mesh, batch_spec(mesh, leaf.ndim))
+        return NamedSharding(mesh, P())
+    return jax.tree.map(one, batch_shape)
+
+
+def decode_state_shardings(mesh: Mesh, state_shape: Any,
+                           cfg: ModelConfig, variant: str = "") -> Any:
+    """KV caches [L, B, C, KV, D]: B->data, C->model. SSM states
+    [L, B, ...]: B->data. pos/enc replicated/batch-sharded.
+    "serve_tp": cache length shards over BOTH axes (idle batch)."""
+    dsz = _axis_size(mesh, "data")
+    msz = _axis_size(mesh, "model")
+
+    def c_axis(b, c):
+        if variant == "serve_tp" and _div(c, dsz * msz):
+            return ("data", "model")
+        return "model" if _div(c, msz) else None
+
+    def one(path, leaf):
+        pstr = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        name = pstr.split("/")[-1]
+        if name in ("k", "v"):
+            l, b, c, kv, d = leaf.shape
+            return NamedSharding(mesh, P(
+                None, "data" if _div(b, dsz) and variant != "serve_tp"
+                else None, c_axis(b, c), None, None))
+        if name == "k_pos":
+            l, b, c = leaf.shape
+            return NamedSharding(mesh, P(
+                None, "data" if _div(b, dsz) and variant != "serve_tp"
+                else None, c_axis(b, c)))
+        if name in ("h", "conv"):
+            b_axis = 1 if leaf.ndim >= 3 else 0
+            spec = [None] * leaf.ndim
+            if _div(leaf.shape[b_axis], dsz):
+                spec[b_axis] = "data"
+            # zamba2 stacks states [groups, per, B, ...]
+            if leaf.ndim >= 4 and not _div(leaf.shape[1], dsz) and \
+                    _div(leaf.shape[2], dsz):
+                spec = [None] * leaf.ndim
+                spec[2] = "data"
+            return NamedSharding(mesh, P(*spec))
+        if name == "enc_out":
+            b = leaf.shape[0]
+            return NamedSharding(mesh, P(
+                "data" if _div(b, dsz) else None))
+        return NamedSharding(mesh, P())
+    return jax.tree_util.tree_map_with_path(one, state_shape)

@@ -1,0 +1,64 @@
+"""Training launcher: `python -m repro.launch.train --arch glm4-9b
+[--reduced] [--steps N] ...`
+
+On real hardware this runs the full config on the production mesh; on
+CPU (this container) use --reduced for the smoke-scale config on a host
+mesh. Wires: config -> model -> shardings -> fault-tolerant Trainer
+(checkpoint/resume/preemption) -> metrics log.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import get_config
+from repro.data.lm import DataConfig
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.models.model import Model
+from repro.optim.adamw import AdamWConfig
+from repro.runtime.trainer import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=0)
+    ap.add_argument("--seq", type=int, default=0)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--remat", default="none")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, reduced=args.reduced)
+    batch = args.batch or (4 if args.reduced else 256)
+    seq = args.seq or (64 if args.reduced else 4096)
+    model = Model(cfg, remat=args.remat)
+    params = model.init(jax.random.PRNGKey(args.seed))
+
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=seq,
+                      global_batch=batch, seed=args.seed)
+    tcfg = TrainerConfig(ckpt_dir=args.ckpt_dir,
+                         ckpt_every=args.ckpt_every)
+    ocfg = AdamWConfig(lr=args.lr, total_steps=args.steps,
+                       warmup_steps=max(args.steps // 20, 5))
+
+    trainer = Trainer(model, dcfg, ocfg, tcfg)
+    trainer.install_signal_handlers()
+
+    def log(step, m):
+        print(f"step {step:5d}  loss {m['loss']:.4f}  "
+              f"lr {m['lr']:.2e}  gnorm {m['grad_norm']:.2f}  "
+              f"{m['step_time_s']*1e3:.0f} ms")
+
+    out = trainer.run(params, args.steps, on_metrics=log)
+    print(f"done at step {out['step']}; preempted={out['preempted']}; "
+          f"stragglers={len(out['stragglers'])}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,110 @@
+"""Tiered embedding table — HADES applied to vocab rows.
+
+Token frequency is zipfian (a few thousand rows absorb most lookups), so
+the embedding table is the canonical hotness-fragmented object array: hot
+rows scattered across a 100k-row table pin the whole table in HBM. The
+tiered table keeps a dense HOT replica of the top rows in HBM and leaves
+the full table in the host tier; a two-level remap (the object table of
+this pool) routes lookups.
+
+Functional state:
+  full   [V, D]  — authoritative table ("host" tier on a real TPU:
+                   memory_kind="pinned_host")
+  hot    [Hn, D] — dense HBM replica of the currently-hot rows
+  remap  [V]     — row -> hot index, or -1 (cold: read through to host)
+  counts [V]     — EMA access counts (the access-bit analog)
+
+`lookup` gathers hot rows from the replica and cold rows from the full
+table (a cold hit is a promotion event — the MIAD signal). `collect`
+re-elects the top-Hn rows and rebuilds the replica (the Object
+Collector's migration, at row granularity).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class TieredEmbeddingConfig:
+    vocab_size: int
+    d_model: int
+    hot_rows: int
+    ema: float = 0.9
+
+
+def init(cfg: TieredEmbeddingConfig, table: jax.Array) -> Dict:
+    """Wrap an existing [V, D] table. Initial hot set: first hot_rows."""
+    hot_ids = jnp.arange(cfg.hot_rows, dtype=jnp.int32)
+    remap = jnp.full((cfg.vocab_size,), -1, jnp.int32) \
+        .at[hot_ids].set(jnp.arange(cfg.hot_rows, dtype=jnp.int32))
+    return {
+        "full": table,
+        "hot": table[hot_ids],
+        "hot_ids": hot_ids,
+        "remap": remap,
+        "counts": jnp.zeros((cfg.vocab_size,), jnp.float32),
+        "win_lookups": jnp.zeros((), jnp.int32),
+        "win_cold_hits": jnp.zeros((), jnp.int32),
+    }
+
+
+def lookup(cfg: TieredEmbeddingConfig, state: Dict, tokens: jax.Array
+           ) -> Tuple[jax.Array, Dict]:
+    """tokens: [...] int32 -> (embeddings [..., D], state with counters).
+    Hot rows come from the dense HBM replica; cold rows read through to
+    the full (host-tier) table — each cold hit is a promotion event."""
+    hot_idx = state["remap"][tokens]                   # [...], -1 = cold
+    is_hot = hot_idx >= 0
+    from_hot = state["hot"][jnp.maximum(hot_idx, 0)]
+    from_full = state["full"][tokens]
+    out = jnp.where(is_hot[..., None], from_hot, from_full)
+    counts = state["counts"].at[tokens.reshape(-1)].add(1.0)
+    return out, dict(
+        state, counts=counts,
+        win_lookups=state["win_lookups"] + tokens.size,
+        win_cold_hits=state["win_cold_hits"] +
+        jnp.sum(~is_hot).astype(jnp.int32))
+
+
+def collect(cfg: TieredEmbeddingConfig, state: Dict) -> Tuple[Dict, Dict]:
+    """Re-elect the hot set from EMA counts and rebuild the dense replica
+    (row migration). Returns (state, report)."""
+    counts = state["counts"]
+    _, hot_ids = jax.lax.top_k(counts, cfg.hot_rows)
+    hot_ids = hot_ids.astype(jnp.int32)
+    remap = jnp.full((cfg.vocab_size,), -1, jnp.int32) \
+        .at[hot_ids].set(jnp.arange(cfg.hot_rows, dtype=jnp.int32))
+    cold_rate = state["win_cold_hits"].astype(jnp.float32) / \
+        jnp.maximum(state["win_lookups"].astype(jnp.float32), 1.0)
+    report = {"cold_hit_rate": cold_rate,
+              "hot_coverage": jnp.sum(counts[hot_ids]) /
+              jnp.maximum(jnp.sum(counts), 1.0)}
+    new_state = dict(
+        state, hot=state["full"][hot_ids], hot_ids=hot_ids, remap=remap,
+        counts=counts * cfg.ema,
+        win_lookups=jnp.zeros((), jnp.int32),
+        win_cold_hits=jnp.zeros((), jnp.int32))
+    return new_state, report
+
+
+def write_rows(state: Dict, rows: jax.Array, values: jax.Array) -> Dict:
+    """Training update path: write full table; refresh any hot replicas."""
+    full = state["full"].at[rows].set(values)
+    hot_idx = state["remap"][rows]
+    is_hot = hot_idx >= 0
+    n_hot = state["hot"].shape[0]
+    hot = state["hot"].at[jnp.where(is_hot, hot_idx, n_hot)].set(
+        values, mode="drop")
+    return dict(state, full=full, hot=hot)
+
+
+def hbm_bytes(cfg: TieredEmbeddingConfig, dtype=jnp.bfloat16) -> int:
+    return cfg.hot_rows * cfg.d_model * jnp.dtype(dtype).itemsize
+
+
+def total_bytes(cfg: TieredEmbeddingConfig, dtype=jnp.bfloat16) -> int:
+    return cfg.vocab_size * cfg.d_model * jnp.dtype(dtype).itemsize

@@ -1,0 +1,96 @@
+"""MoE expert tiering — HADES management plane for expert slabs.
+
+Per-expert routed-token counts (returned by moe_block every step) are the
+access bitmap at expert granularity. This module runs the same
+CIW + MIAD state machine over experts: hot experts stay HBM-resident
+("huge-page promoted": their slabs kept dense/contiguous), cold experts
+become demotion candidates and are paged to host once the re-route rate
+(promotions) is safely below target.
+
+This is the *management plane*: residency decisions + accounting. On a
+real TPU the data plane moves the slab with device_put to
+memory_kind="pinned_host" and streams it back on a fault; on CPU (this
+container) residency is tracked and fault penalties are counted, which is
+what the benchmarks measure. olmoe (64 experts, top-8) is the headroom
+case: steady-state routing concentrates, and the cold majority of slabs
+can leave HBM.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ExpertTieringConfig:
+    num_layers: int
+    num_experts: int
+    bytes_per_expert: int
+    ciw_threshold: int = 3
+    ciw_max: int = 31
+    promotion_target: float = 0.01
+    miad_mult: float = 2.0
+    miad_add: float = 1.0
+    ct_min: float = 1.0
+    ct_max: float = 16.0
+
+
+def init(cfg: ExpertTieringConfig) -> Dict:
+    le = (cfg.num_layers, cfg.num_experts)
+    return {
+        "ciw": jnp.zeros(le, jnp.int32),
+        "resident": jnp.ones(le, jnp.bool_),     # HBM-resident slabs
+        "ct": jnp.asarray(float(cfg.ciw_threshold), jnp.float32),
+        "win_routed": jnp.zeros((), jnp.int32),
+        "win_promos": jnp.zeros((), jnp.int32),  # tokens routed to demoted
+        "total_faults": jnp.zeros((), jnp.int32),
+    }
+
+
+def observe(cfg: ExpertTieringConfig, state: Dict, counts: jax.Array
+            ) -> Dict:
+    """counts: [L, E] tokens routed per expert this step. Tokens hitting a
+    non-resident expert are promotion events (the slab faults back)."""
+    hit = counts > 0
+    faulted = hit & ~state["resident"]
+    return dict(
+        state,
+        resident=state["resident"] | faulted,     # fault-in
+        win_routed=state["win_routed"] + jnp.sum(counts),
+        win_promos=state["win_promos"] +
+        jnp.sum(jnp.where(faulted, counts, 0)),
+        total_faults=state["total_faults"] +
+        jnp.sum(faulted).astype(jnp.int32),
+        # stash hits for collect (access bits)
+        _hits=hit)
+
+
+def collect(cfg: ExpertTieringConfig, state: Dict) -> Tuple[Dict, Dict]:
+    """CIW update + MIAD + demotion of cold expert slabs."""
+    hits = state.get("_hits", jnp.zeros_like(state["ciw"], jnp.bool_))
+    ciw = jnp.where(hits, 0, jnp.minimum(state["ciw"] + 1, cfg.ciw_max))
+    rate = state["win_promos"].astype(jnp.float32) / \
+        jnp.maximum(state["win_routed"].astype(jnp.float32), 1.0)
+    hot = rate > cfg.promotion_target
+    ct = jnp.where(hot,
+                   jnp.minimum(state["ct"] * cfg.miad_mult, cfg.ct_max),
+                   jnp.maximum(state["ct"] - cfg.miad_add, cfg.ct_min))
+    demote = ciw > jnp.floor(ct).astype(jnp.int32)
+    resident = state["resident"] & ~demote
+    n_resident = jnp.sum(resident)
+    report = {
+        "promotion_rate": rate,
+        "resident_experts": n_resident,
+        "hbm_bytes": n_resident.astype(jnp.float32) * cfg.bytes_per_expert,
+        "total_bytes": float(cfg.num_layers * cfg.num_experts *
+                             cfg.bytes_per_expert),
+        "ct": ct,
+    }
+    new_state = dict(state, ciw=ciw, resident=resident, ct=ct,
+                     win_routed=jnp.zeros((), jnp.int32),
+                     win_promos=jnp.zeros((), jnp.int32))
+    new_state.pop("_hits", None)
+    return new_state, report

@@ -1,0 +1,186 @@
+"""Paged KV cache managed by the HADES frontend.
+
+The representative framework application of the paper (DESIGN.md §3.1):
+decode-time KV blocks are *objects* in a HadesPool — each block is
+`block_tokens` of K+V for one layer of one sequence. All reads go through
+the object table (the dereference), the Pallas `paged_attention` kernel
+records access bits as a by-product of its DMAs, and the Object Collector
+densifies hot blocks (recent windows, attention sinks) into HOT
+superblocks while cold prefixes drift to COLD and get paged to host.
+
+Logical object id = ((layer * batch) + seq) * max_blocks + block_idx.
+Block tables hold LOGICAL ids; physical slots are resolved through the
+pool table right before the kernel — which is what makes migration
+transparent to the serving loop (the paper's pointer-update guarantee).
+
+Everything here is functional and jit-safe; the serving loop in
+runtime/server.py drives (append -> attend -> record -> collect).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import collector as col
+from repro.core import object_table as ot
+from repro.core import pool as pl
+from repro.kernels import ops as kops
+
+
+@dataclasses.dataclass(frozen=True)
+class KVCacheConfig:
+    num_layers: int
+    batch: int
+    max_blocks: int          # per (layer, sequence)
+    block_tokens: int
+    num_kv_heads: int
+    head_dim: int
+    dtype: str = "bfloat16"
+    sb_slots: int = 16       # superblock granularity (blocks per madvise)
+    slack: float = 1.5
+
+    @property
+    def max_objects(self) -> int:
+        return self.num_layers * self.batch * self.max_blocks
+
+    @property
+    def slot_words(self) -> int:
+        return 2 * self.block_tokens * self.num_kv_heads * self.head_dim
+
+    def obj_id(self, layer, seq, block):
+        return (layer * self.batch + seq) * self.max_blocks + block
+
+    def pool_config(self) -> pl.PoolConfig:
+        return pl.make_config(
+            self.max_objects, self.slot_words, sb_slots=self.sb_slots,
+            page_slots=max(self.sb_slots // 4, 1), slack=self.slack,
+            dtype=self.dtype)
+
+
+def init(cfg: KVCacheConfig) -> Dict:
+    return {
+        "pool": pl.init(cfg.pool_config()),
+        # logical block table: -1 = unallocated
+        "block_tables": jnp.full(
+            (cfg.num_layers, cfg.batch, cfg.max_blocks), -1, jnp.int32),
+        "pos": jnp.zeros((cfg.batch,), jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# append — write this step's k/v for ALL layers at the current position
+# ---------------------------------------------------------------------------
+def append(cfg: KVCacheConfig, state: Dict, k: jax.Array, v: jax.Array
+           ) -> Dict:
+    """k/v: [L, B, KV, D] (one new token per sequence). Allocates fresh
+    blocks at block boundaries, then scatters the token into each block's
+    slot at the intra-block offset."""
+    pcfg = cfg.pool_config()
+    pos = state["pos"]                       # [B]
+    blk = pos // cfg.block_tokens            # [B]
+    off = pos % cfg.block_tokens             # [B]
+    l_idx = jnp.arange(cfg.num_layers)[:, None]
+    b_idx = jnp.arange(cfg.batch)[None, :]
+    obj = ((l_idx * cfg.batch + b_idx) * cfg.max_blocks + blk[None, :]
+           ).astype(jnp.int32)               # [L, B]
+
+    # allocate blocks where off == 0 (start of a new block)
+    need = jnp.broadcast_to(off[None, :] == 0, obj.shape)
+    pool = state["pool"]
+    zeros = jnp.zeros((cfg.num_layers * cfg.batch, pcfg.slot_words),
+                      pool["data"].dtype)
+    pool = pl.alloc(pcfg, pool, jnp.where(need, obj, -1).reshape(-1), zeros)
+    bt = state["block_tables"].at[
+        l_idx, b_idx, jnp.broadcast_to(blk[None, :], obj.shape)
+    ].set(jnp.where(need, obj, state["block_tables"][
+        l_idx, b_idx, jnp.broadcast_to(blk[None, :], obj.shape)]))
+
+    # scatter the token into each block slot at offset `off`
+    words = pool["table"][obj.reshape(-1)]
+    slots = ot.slot_of(words).astype(jnp.int32).reshape(cfg.num_layers,
+                                                        cfg.batch)
+    data = pool["data"].reshape(
+        -1, 2, cfg.block_tokens, cfg.num_kv_heads, cfg.head_dim)
+    kv_tok = jnp.stack([k, v], axis=2)        # [L, B, 2, KV, D]
+    data = data.at[slots, :, off[None, :], :, :].set(
+        kv_tok.astype(data.dtype))
+    pool = dict(pool, data=data.reshape(pool["data"].shape))
+    return dict(state, pool=pool,
+                block_tables=bt, pos=pos + 1)
+
+
+# ---------------------------------------------------------------------------
+# attend — decode attention through the table (Pallas kernel) + tracking
+# ---------------------------------------------------------------------------
+def attend(cfg: KVCacheConfig, state: Dict, layer: int, q: jax.Array
+           ) -> Tuple[jax.Array, Dict]:
+    """q: [B, H, D] -> (out [B, H, D], state with access recorded)."""
+    pcfg = cfg.pool_config()
+    pool = state["pool"]
+    tbl = state["block_tables"][layer]               # [B, MB] logical ids
+    live = tbl >= 0
+    words = pool["table"][jnp.maximum(tbl, 0)]
+    slots = jnp.where(live, ot.slot_of(words).astype(jnp.int32), -1)
+
+    pages = pool["data"].reshape(
+        -1, 2, cfg.block_tokens, cfg.num_kv_heads, cfg.head_dim)
+    out, touched = kops.paged_attention(
+        q, pages[:, 0], pages[:, 1], slots, state["pos"])
+
+    # the kernel's fused access bits -> object-table access bits
+    touched_ids = jnp.where(touched & live, tbl, -1).reshape(-1)
+    pool = _record_touched(pcfg, pool, touched_ids)
+    return out, dict(state, pool=pool)
+
+
+def _record_touched(pcfg: pl.PoolConfig, pool: Dict, obj_ids: jax.Array
+                    ) -> Dict:
+    """pool.read's accounting without the data gather (the kernel already
+    did the reads): access bits, ATC when armed, promo/fault counters."""
+    valid = obj_ids >= 0
+    ids = jnp.maximum(obj_ids, 0)
+    words = pool["table"][ids]
+    live = ot.is_live(words) & valid
+    tbl = ot.record_access(pool["table"], jnp.where(live, obj_ids, -1),
+                           armed=pool["armed"])
+    slots = ot.slot_of(words).astype(jnp.int32)
+    sbs = slots // pcfg.sb_slots
+    on_host = live & (pool["sb_tier"][sbs] == pl.HOST)
+    fault_mask = jnp.zeros((pcfg.n_sbs,), jnp.bool_).at[
+        jnp.where(on_host, sbs, pcfg.n_sbs)].set(True, mode="drop")
+    n_faults = jnp.sum(fault_mask).astype(jnp.int32)
+    promos = jnp.sum(live & (ot.heap_of(words) == ot.COLD)).astype(jnp.int32)
+    return dict(
+        pool, table=tbl,
+        sb_tier=jnp.where(fault_mask, pl.HBM, pool["sb_tier"]).astype(jnp.int8),
+        sb_evict=jnp.where(fault_mask, pl.NORMAL,
+                           pool["sb_evict"]).astype(jnp.int8),
+        win_accesses=pool["win_accesses"] + jnp.sum(live),
+        win_promos=pool["win_promos"] + promos,
+        win_faults=pool["win_faults"] + n_faults,
+        total_faults=pool["total_faults"] + n_faults)
+
+
+# ---------------------------------------------------------------------------
+# collect — run the Object Collector + backend over the KV pool
+# ---------------------------------------------------------------------------
+def collect(cfg: KVCacheConfig, state: Dict,
+            col_cfg: Optional[col.CollectorConfig] = None
+            ) -> Tuple[Dict, Dict]:
+    pcfg = cfg.pool_config()
+    pool, report = col.collect(pcfg, col_cfg or col.CollectorConfig(),
+                               state["pool"])
+    return dict(state, pool=pool), report
+
+
+def arm(state: Dict) -> Dict:
+    return dict(state, pool=col.arm(state["pool"]))
+
+
+def kv_bytes(cfg: KVCacheConfig) -> int:
+    itemsize = jnp.dtype(cfg.dtype).itemsize
+    return cfg.max_objects * cfg.slot_words * itemsize

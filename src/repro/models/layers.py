@@ -1,0 +1,154 @@
+"""Core layers: RMSNorm, MLPs, rotary embeddings (RoPE / M-RoPE / 2d-RoPE),
+embeddings and the logits head.
+
+All matmul weights are stored bf16 (cfg.dtype); norm/softmax/rotary run in
+fp32 and cast back. Layers are pure functions over explicit param pytrees so
+they compose with lax.scan / jax.checkpoint / shard_map.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norm
+# ---------------------------------------------------------------------------
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    orig = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + scale.astype(jnp.float32))).astype(orig)
+
+
+def init_rms_norm(d: int) -> jax.Array:
+    return jnp.zeros((d,), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# MLP (dense FFN)
+# ---------------------------------------------------------------------------
+def init_mlp(key, d_model: int, d_ff: int, gated: bool, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = d_model ** -0.5
+    s_out = d_ff ** -0.5
+    p = {
+        "wi": (jax.random.normal(k1, (d_model, d_ff)) * s_in).astype(dtype),
+        "wo": (jax.random.normal(k2, (d_ff, d_model)) * s_out).astype(dtype),
+    }
+    if gated:
+        p["wg"] = (jax.random.normal(k3, (d_model, d_ff)) * s_in).astype(dtype)
+    return p
+
+
+def mlp(p: dict, x: jax.Array, gated: bool) -> jax.Array:
+    h = jnp.einsum("...d,df->...f", x, p["wi"])
+    if gated:
+        g = jnp.einsum("...d,df->...f", x, p["wg"])
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(h.dtype) * h
+    else:
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(h.dtype)
+    return jnp.einsum("...f,fd->...d", h, p["wo"])
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings
+# ---------------------------------------------------------------------------
+def rope_freqs(dim: int, theta: float) -> jax.Array:
+    """Inverse frequencies for a rotary dim (must be even)."""
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def _rotate(x: jax.Array, angles: jax.Array) -> jax.Array:
+    """Apply rotation given per-position angles [..., dim/2] to x [..., dim]."""
+    orig = x.dtype
+    x = x.astype(jnp.float32)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    return jnp.concatenate([x1 * cos - x2 * sin,
+                            x1 * sin + x2 * cos], axis=-1).astype(orig)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Standard RoPE. x: [B, S, H, D]; positions: [B, S] int32."""
+    d = x.shape[-1]
+    inv = rope_freqs(d, theta)                       # [d/2]
+    ang = positions[..., None].astype(jnp.float32) * inv   # [B, S, d/2]
+    return _rotate(x, ang[:, :, None, :])
+
+
+def apply_rope2d(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """ChatGLM-style partial rotary: rotate the first half of head_dim with
+    the primary position stream; leave the second half unrotated.
+    positions: [B, S] (block position stream folded into primary for the
+    text backbone)."""
+    d = x.shape[-1]
+    half = d // 2
+    xr, xp = x[..., :half], x[..., half:]
+    inv = rope_freqs(half, theta)
+    ang = positions[..., None].astype(jnp.float32) * inv
+    return jnp.concatenate([_rotate(xr, ang[:, :, None, :]), xp], axis=-1)
+
+
+def apply_mrope(x: jax.Array, positions: jax.Array, theta: float,
+                sections: Tuple[int, int, int] = (2, 1, 1)) -> jax.Array:
+    """Qwen2-VL M-RoPE: head_dim/2 frequency lanes are partitioned into
+    (temporal, height, width) sections; each section uses its own position
+    stream. positions: [3, B, S] (text tokens use t==h==w).
+    `sections` are relative proportions; scaled to d/2 lanes."""
+    d = x.shape[-1]
+    lanes = d // 2
+    total = sum(sections)
+    sizes = [lanes * s // total for s in sections]
+    sizes[0] = lanes - sizes[1] - sizes[2]
+    inv = rope_freqs(d, theta)                        # [lanes]
+    pos = positions.astype(jnp.float32)               # [3, B, S]
+    # build per-lane position by section
+    sec_id = jnp.concatenate([
+        jnp.full((sizes[0],), 0), jnp.full((sizes[1],), 1),
+        jnp.full((sizes[2],), 2)]).astype(jnp.int32)  # [lanes]
+    pos_lanes = jnp.take(pos, sec_id, axis=0)         # [lanes, B, S] -> gather over section
+    # pos_lanes: [lanes, B, S] -> [B, S, lanes]
+    pos_lanes = jnp.moveaxis(pos_lanes, 0, -1)
+    ang = pos_lanes * inv                             # [B, S, lanes]
+    return _rotate(x, ang[:, :, None, :])
+
+
+def positional(cfg: ModelConfig, x: jax.Array, positions: jax.Array) -> jax.Array:
+    """Dispatch on cfg.rope_style. positions: [B,S] or [3,B,S] for mrope."""
+    if cfg.rope_style == "none":
+        return x
+    if cfg.rope_style == "rope":
+        return apply_rope(x, positions, cfg.rope_theta)
+    if cfg.rope_style == "rope2d":
+        return apply_rope2d(x, positions, cfg.rope_theta)
+    if cfg.rope_style == "mrope":
+        if positions.ndim == 2:  # text-only stub: t == h == w
+            positions = jnp.broadcast_to(positions[None], (3,) + positions.shape)
+        return apply_mrope(x, positions, cfg.rope_theta)
+    raise ValueError(cfg.rope_style)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+def init_embedding(key, vocab: int, d_model: int, dtype) -> jax.Array:
+    return (jax.random.normal(key, (vocab, d_model)) * 0.02).astype(dtype)
+
+
+def embed(table: jax.Array, tokens: jax.Array) -> jax.Array:
+    return jnp.take(table, tokens, axis=0)
+
+
+def logits_head(table_out: jax.Array, x: jax.Array) -> jax.Array:
+    """x: [..., D]; table_out: [D, V] -> [..., V] in fp32."""
+    return jnp.einsum("...d,dv->...v", x, table_out).astype(jnp.float32)

@@ -1,0 +1,148 @@
+"""Public model facade: one object per architecture wrapping init / forward /
+loss / prefill / decode, plus `input_specs` — ShapeDtypeStruct stand-ins for
+every model input (weak-type-correct, shardable, no device allocation), used
+by the multi-pod dry-run and the launchers.
+
+Modality frontends are STUBS per the assignment: [audio] supplies precomputed
+frame embeddings (encoder input), [vlm] supplies precomputed patch embeddings
+(prepended to the text stream with M-RoPE positions).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import ShapeSpec
+from repro.models import transformer as T
+
+VLM_PATCHES = 256  # patch budget for the vision stub (full shapes)
+
+
+def vlm_patches(seq_len: int) -> int:
+    """Patch count for a cell: 256 for full shapes, scaled down for smoke."""
+    return min(VLM_PATCHES, max(4, seq_len // 4))
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig, attn_impl: str = "blockwise",
+                 remat: str = "none"):
+        self.cfg = cfg
+        self.attn_impl = attn_impl
+        self.remat = remat
+
+    # -- parameters ---------------------------------------------------------
+    def init(self, key) -> dict:
+        return T.init_lm(self.cfg, key)
+
+    def param_specs(self) -> dict:
+        """Shape/dtype tree without allocating (for dry-run)."""
+        return jax.eval_shape(
+            lambda: T.init_lm(self.cfg, jax.random.PRNGKey(0)))
+
+    # -- batches ------------------------------------------------------------
+    def input_specs(self, shape: ShapeSpec, for_decode_state: bool = True
+                    ) -> Dict[str, jax.ShapeDtypeStruct]:
+        """ShapeDtypeStruct stand-ins for every input of the step function
+        selected by shape.mode."""
+        cfg = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+        f32 = jnp.dtype(jnp.float32)
+        i32 = jnp.dtype(jnp.int32)
+        bf16 = jnp.dtype(cfg.dtype)
+        sds = jax.ShapeDtypeStruct
+
+        if shape.mode == "train":
+            batch: Dict = {}
+            s_txt = s
+            if cfg.frontend == "vision":
+                p = vlm_patches(s)
+                s_txt = s - p
+                batch["extra_embeds"] = sds((b, p, cfg.d_model), bf16)
+            if cfg.is_encoder_decoder:
+                batch["enc_embeds"] = sds((b, cfg.encoder_seq_len,
+                                           cfg.d_model), f32)
+            batch["tokens"] = sds((b, s_txt), i32)
+            batch["labels"] = sds((b, s_txt), i32)
+            return batch
+        if shape.mode == "prefill":
+            batch = {}
+            s_txt = s
+            if cfg.frontend == "vision":
+                p = vlm_patches(s)
+                s_txt = s - p
+                batch["extra_embeds"] = sds((b, p, cfg.d_model), bf16)
+            if cfg.is_encoder_decoder:
+                batch["enc_embeds"] = sds((b, cfg.encoder_seq_len,
+                                           cfg.d_model), f32)
+            batch["tokens"] = sds((b, s_txt), i32)
+            return batch
+        if shape.mode == "decode":
+            batch = {"tokens": sds((b,), i32)}
+            if for_decode_state:
+                enc = None
+                if cfg.is_encoder_decoder:
+                    enc = jax.ShapeDtypeStruct(
+                        (b, cfg.encoder_seq_len, cfg.d_model), bf16)
+                batch["state"] = jax.eval_shape(
+                    lambda e: T.init_decode_state(cfg, b, s, enc_out=e), enc)
+            return batch
+        raise ValueError(shape.mode)
+
+    def make_inputs(self, shape: ShapeSpec, key) -> Dict[str, jax.Array]:
+        """Concrete random inputs matching input_specs (smoke tests)."""
+        specs = self.input_specs(shape, for_decode_state=False)
+        ks = jax.random.split(key, len(specs))
+        out = {}
+        for (name, spec), k in zip(sorted(specs.items()), ks):
+            if jnp.issubdtype(spec.dtype, jnp.integer):
+                out[name] = jax.random.randint(
+                    k, spec.shape, 0, self.cfg.vocab_size, dtype=spec.dtype)
+            else:
+                out[name] = (jax.random.normal(k, spec.shape) * 0.02
+                             ).astype(spec.dtype)
+        if shape.mode == "decode":
+            enc = None
+            if self.cfg.is_encoder_decoder:
+                enc = (jax.random.normal(
+                    ks[0], (shape.global_batch, self.cfg.encoder_seq_len,
+                            self.cfg.d_model)) * 0.02).astype(jnp.dtype(self.cfg.dtype))
+            out["state"] = T.init_decode_state(
+                self.cfg, shape.global_batch, shape.seq_len, enc_out=enc)
+        return out
+
+    # -- step functions -----------------------------------------------------
+    def forward(self, params, batch) -> Tuple[jax.Array, dict]:
+        return T.lm_forward(
+            params, self.cfg, batch["tokens"],
+            extra_embeds=batch.get("extra_embeds"),
+            enc_embeds=batch.get("enc_embeds"),
+            attn_impl=self.attn_impl, remat=self.remat)
+
+    def loss(self, params, batch) -> Tuple[jax.Array, dict]:
+        return T.lm_loss(
+            params, self.cfg, batch["tokens"], batch["labels"],
+            extra_embeds=batch.get("extra_embeds"),
+            enc_embeds=batch.get("enc_embeds"),
+            attn_impl=self.attn_impl, remat=self.remat)
+
+    def prefill(self, params, batch):
+        logits, aux = T.lm_forward(
+            params, self.cfg, batch["tokens"],
+            extra_embeds=batch.get("extra_embeds"),
+            enc_embeds=batch.get("enc_embeds"),
+            attn_impl=self.attn_impl, remat=self.remat, return_cache=False)
+        return logits
+
+    def init_decode_state(self, batch: int, max_len: int, enc_out=None):
+        return T.init_decode_state(self.cfg, batch, max_len, enc_out=enc_out)
+
+    def decode_step(self, params, state, tokens):
+        return T.lm_decode_step(params, self.cfg, state, tokens)
+
+
+def build(arch_id: str, reduced: bool = False, **kw) -> Model:
+    from repro.configs import get_config
+    return Model(get_config(arch_id, reduced=reduced), **kw)

@@ -1,0 +1,273 @@
+"""Selective state-space blocks: Mamba-1 (falcon-mamba) and Mamba-2/SSD
+(zamba2), with sequence-parallel chunked scans for training/prefill and O(1)
+single-step updates for decode.
+
+Training scan strategy (pure JAX; the Pallas `mamba_scan` kernel mirrors it):
+  * mamba1: recurrence h_t = a_t*h_{t-1} + b_t runs as lax.scan over chunks
+    with a within-chunk associative scan — transient memory is
+    O(B*chunk*Din*N) instead of O(B*S*Din*N).
+  * mamba2 (SSD): block decomposition into intra-chunk matmuls + inter-chunk
+    state carry — all MXU-shaped einsums.
+
+Decode state per layer: {"h": [B, ...states...], "conv": [B, K-1, Din]}.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+MAMBA2_HEADDIM = 64
+
+
+def _dt_rank(cfg: ModelConfig) -> int:
+    return max(1, math.ceil(cfg.d_model / 16))
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+def init_mamba1(key, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    din = d * cfg.ssm_expand
+    n = cfg.ssm_state_dim
+    k_conv = cfg.ssm_conv_dim
+    r = _dt_rank(cfg)
+    ks = jax.random.split(key, 6)
+    s = d ** -0.5
+    return {
+        "in_proj": (jax.random.normal(ks[0], (d, 2 * din)) * s).astype(dtype),
+        "conv_w": (jax.random.normal(ks[1], (k_conv, din)) * 0.2).astype(dtype),
+        "conv_b": jnp.zeros((din,), dtype),
+        "x_proj": (jax.random.normal(ks[2], (din, r + 2 * n)) * din ** -0.5).astype(dtype),
+        "dt_proj": (jax.random.normal(ks[3], (r, din)) * r ** -0.5).astype(dtype),
+        "dt_bias": jnp.log(jnp.expm1(  # softplus^-1 of uniform dt in [1e-3, 1e-1]
+            jnp.exp(jax.random.uniform(ks[4], (din,),
+                    minval=math.log(1e-3), maxval=math.log(1e-1))))).astype(jnp.float32),
+        "A_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, n + 1, dtype=jnp.float32), (din, n))),
+        "D": jnp.ones((din,), jnp.float32),
+        "out_proj": (jax.random.normal(ks[5], (din, d)) * din ** -0.5).astype(dtype),
+    }
+
+
+def init_mamba2(key, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    din = d * cfg.ssm_expand
+    n = cfg.ssm_state_dim
+    nh = din // MAMBA2_HEADDIM
+    k_conv = cfg.ssm_conv_dim
+    ks = jax.random.split(key, 4)
+    s = d ** -0.5
+    conv_dim = din + 2 * n  # conv runs over (x, B, C)
+    return {
+        "in_proj": (jax.random.normal(
+            ks[0], (d, 2 * din + 2 * n + nh)) * s).astype(dtype),
+        "conv_w": (jax.random.normal(ks[1], (k_conv, conv_dim)) * 0.2).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jax.random.uniform(ks[2], (nh,), minval=1.0, maxval=16.0)),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(ks[3], (nh,),
+                    minval=math.log(1e-3), maxval=math.log(1e-1))))).astype(jnp.float32),
+        "norm": jnp.zeros((din,), jnp.float32),
+        "out_proj": (jax.random.normal(ks[0], (din, d)) * din ** -0.5).astype(dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Causal depthwise conv1d
+# ---------------------------------------------------------------------------
+def causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                state: jax.Array = None) -> Tuple[jax.Array, jax.Array]:
+    """x: [B, S, C]; w: [K, C]; state: [B, K-1, C] (decode) or None (train
+    — zero history). Returns (y [B,S,C], new_state [B,K-1,C])."""
+    k = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)              # [B, S+K-1, C]
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(k)) + b
+    new_state = xp[:, -(k - 1):, :] if k > 1 else state
+    return y, new_state
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1
+# ---------------------------------------------------------------------------
+def _m1_scan(a: jax.Array, b: jax.Array, h0: jax.Array,
+             chunk: int) -> Tuple[jax.Array, jax.Array]:
+    """Linear recurrence h_t = a_t * h_{t-1} + b_t. a, b: [B, S, C, N];
+    h0: [B, C, N]. Returns (h_all [B,S,C,N], h_last)."""
+    bsz, s, c, n = a.shape
+    chunk = min(chunk, s)
+    if s % chunk:
+        raise ValueError(f"seq {s} % chunk {chunk} != 0")
+    nc = s // chunk
+    ac = jnp.moveaxis(a.reshape(bsz, nc, chunk, c, n), 1, 0)
+    bc = jnp.moveaxis(b.reshape(bsz, nc, chunk, c, n), 1, 0)
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    def body(h, xs):
+        ai, bi = xs                                       # [B, chunk, C, N]
+        aa, bb = jax.lax.associative_scan(combine, (ai, bi), axis=1)
+        h_all = aa * h[:, None] + bb                      # prefix applied
+        return h_all[:, -1], h_all
+
+    h_last, h_chunks = jax.lax.scan(body, h0, (ac, bc))
+    h_all = jnp.moveaxis(h_chunks, 0, 1).reshape(bsz, s, c, n)
+    return h_all, h_last
+
+
+def mamba1_forward(p: dict, x: jax.Array, cfg: ModelConfig, *,
+                   chunk: int = 256,
+                   state: Dict[str, jax.Array] = None
+                   ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """x: [B, S, D]. state (decode continuation) or None (from zeros).
+    Returns (y [B,S,D], new_state)."""
+    bsz, s, d = x.shape
+    din = d * cfg.ssm_expand
+    n = cfg.ssm_state_dim
+    r = _dt_rank(cfg)
+
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    xr, z = jnp.split(xz, 2, axis=-1)                     # [B,S,Din] each
+    conv_state = None if state is None else state["conv"]
+    xr, new_conv = causal_conv(xr, p["conv_w"], p["conv_b"], conv_state)
+    xr = jax.nn.silu(xr.astype(jnp.float32)).astype(xz.dtype)
+
+    proj = jnp.einsum("bsc,ce->bse", xr, p["x_proj"])
+    dt, bmat, cmat = jnp.split(proj, [r, r + n], axis=-1)
+    dt = jnp.einsum("bsr,rc->bsc", dt, p["dt_proj"]).astype(jnp.float32)
+    dt = jax.nn.softplus(dt + p["dt_bias"])               # [B,S,Din]
+    a = -jnp.exp(p["A_log"])                              # [Din, N]
+    da = jnp.exp(dt[..., None] * a)                       # [B,S,Din,N]
+    db = (dt * xr.astype(jnp.float32))[..., None] * \
+        bmat.astype(jnp.float32)[:, :, None, :]           # [B,S,Din,N]
+
+    h0 = jnp.zeros((bsz, din, n), jnp.float32) if state is None else state["h"]
+    h_all, h_last = _m1_scan(da, db, h0, chunk)
+    y = jnp.einsum("bscn,bsn->bsc", h_all,
+                   cmat.astype(jnp.float32))              # [B,S,Din]
+    y = y + xr.astype(jnp.float32) * p["D"]
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    out = jnp.einsum("bsc,cd->bsd", y.astype(x.dtype), p["out_proj"])
+    return out, {"h": h_last, "conv": new_conv}
+
+
+def mamba1_step(p: dict, x: jax.Array, cfg: ModelConfig,
+                state: Dict[str, jax.Array]
+                ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Decode: x [B, 1, D] -> (y [B, 1, D], new_state). O(1) in seq."""
+    return mamba1_forward(p, x, cfg, chunk=1, state=state)
+
+
+def mamba1_init_state(cfg: ModelConfig, batch: int, dtype) -> Dict[str, jax.Array]:
+    din = cfg.d_model * cfg.ssm_expand
+    return {
+        "h": jnp.zeros((batch, din, cfg.ssm_state_dim), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv_dim - 1, din), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 (SSD)
+# ---------------------------------------------------------------------------
+def mamba2_forward(p: dict, x: jax.Array, cfg: ModelConfig, *,
+                   chunk: int = 128,
+                   state: Dict[str, jax.Array] = None
+                   ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """SSD block decomposition. x: [B, S, D]."""
+    bsz, s, d = x.shape
+    din = d * cfg.ssm_expand
+    n = cfg.ssm_state_dim
+    ph = MAMBA2_HEADDIM
+    nh = din // ph
+
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    z, xbc, dt = jnp.split(zxbcdt, [din, 2 * din + 2 * n], axis=-1)
+    conv_state = None if state is None else state["conv"]
+    xbc, new_conv = causal_conv(xbc, p["conv_w"], p["conv_b"], conv_state)
+    xbc = jax.nn.silu(xbc.astype(jnp.float32)).astype(zxbcdt.dtype)
+    xr, bmat, cmat = jnp.split(xbc, [din, din + n], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # [B,S,H]
+    a = -jnp.exp(p["A_log"])                                     # [H]
+    xh = xr.reshape(bsz, s, nh, ph)
+    bf = bmat.astype(jnp.float32)                                # [B,S,N]
+    cf = cmat.astype(jnp.float32)
+
+    chunk = min(chunk, s)
+    if s % chunk:
+        raise ValueError(f"seq {s} % chunk {chunk} != 0")
+    nc = s // chunk
+    # reshape to chunks
+    dtc = dt.reshape(bsz, nc, chunk, nh)
+    xc = xh.reshape(bsz, nc, chunk, nh, ph).astype(jnp.float32)
+    bc = bf.reshape(bsz, nc, chunk, n)
+    cc = cf.reshape(bsz, nc, chunk, n)
+
+    da = dtc * a                                                # [B,NC,L,H]
+    cum = jnp.cumsum(da, axis=2)                                # within-chunk
+    seg = jnp.exp(cum[:, :, :, None, :] - cum[:, :, None, :, :])  # [B,NC,L,L,H]
+    causal = jnp.tril(jnp.ones((chunk, chunk), jnp.bool_))
+    seg = jnp.where(causal[None, None, :, :, None], seg, 0.0)
+    cb = jnp.einsum("bzln,bzmn->bzlm", cc, bc)                  # [B,NC,L,L]
+    dtx = dtc[..., None] * xc                                   # [B,NC,L,H,P]
+    y_intra = jnp.einsum("bzlm,bzlmh,bzmhp->bzlhp", cb, seg, dtx)
+
+    # chunk-final states: S_z = sum_m exp(cum_last - cum_m) dt_m B_m x_m
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)             # [B,NC,L,H]
+    sstate = jnp.einsum("bzmn,bzmh,bzmhp->bznhp", bc,
+                        decay_to_end, dtx)                      # [B,NC,N,H,P]
+
+    # carry states across chunks: S'_{z} = exp(sum da_z) S'_{z-1} + S_z
+    chunk_decay = jnp.exp(jnp.sum(da, axis=2))                  # [B,NC,H]
+    h0 = (jnp.zeros((bsz, n, nh, ph), jnp.float32) if state is None
+          else state["h"])
+
+    def body(h, xs):
+        dec, snew = xs                                          # [B,H], [B,N,H,P]
+        h_in = h
+        h = dec[:, None, :, None] * h + snew
+        return h, h_in
+
+    dec_t = jnp.moveaxis(chunk_decay, 1, 0)
+    ss_t = jnp.moveaxis(sstate, 1, 0)
+    h_last, h_prevs = jax.lax.scan(body, h0, (dec_t, ss_t))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)                       # [B,NC,N,H,P]
+
+    y_inter = jnp.einsum("bzln,bzlh,bznhp->bzlhp",
+                         cc, jnp.exp(cum), h_prevs)
+    y = (y_intra + y_inter).reshape(bsz, s, nh, ph)
+    y = y + xh.astype(jnp.float32) * p["D"][:, None]
+    y = y.reshape(bsz, s, din)
+    # gated RMSNorm (mamba2 norm-before-out_proj)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+    y = y * jax.lax.rsqrt(var + 1e-5) * (1.0 + p["norm"])
+    out = jnp.einsum("bsc,cd->bsd", y.astype(x.dtype), p["out_proj"])
+    return out, {"h": h_last, "conv": new_conv}
+
+
+def mamba2_step(p: dict, x: jax.Array, cfg: ModelConfig,
+                state: Dict[str, jax.Array]
+                ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    return mamba2_forward(p, x, cfg, chunk=1, state=state)
+
+
+def mamba2_init_state(cfg: ModelConfig, batch: int, dtype) -> Dict[str, jax.Array]:
+    din = cfg.d_model * cfg.ssm_expand
+    n = cfg.ssm_state_dim
+    nh = din // MAMBA2_HEADDIM
+    return {
+        "h": jnp.zeros((batch, n, nh, MAMBA2_HEADDIM), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv_dim - 1, din + 2 * n), dtype),
+    }

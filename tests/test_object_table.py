@@ -1,0 +1,62 @@
+"""Object-table word packing: lossless round-trip + field isolation
+(the tagged-pointer invariant: metadata updates never corrupt the slot)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import object_table as ot
+
+slots = st.integers(0, (1 << ot.SLOT_BITS) - 1)
+heaps = st.integers(0, 3)
+bits = st.integers(0, 1)
+atcs = st.integers(0, (1 << ot.ATC_BITS) - 1)
+ciws = st.integers(0, (1 << ot.CIW_BITS) - 1)
+
+
+@settings(max_examples=200, deadline=None)
+@given(slots, heaps, bits, atcs, ciws)
+def test_pack_roundtrip(slot, heap, acc, atc, ciw):
+    w = ot.pack(slot, heap, acc, atc, ciw)
+    assert int(ot.slot_of(w)) == slot
+    assert int(ot.heap_of(w)) == heap
+    assert int(ot.access_of(w)) == acc
+    assert int(ot.atc_of(w)) == atc
+    assert int(ot.ciw_of(w)) == ciw
+
+
+@settings(max_examples=100, deadline=None)
+@given(slots, heaps, bits, atcs, ciws, slots, heaps, atcs, ciws)
+def test_field_updates_isolated(slot, heap, acc, atc, ciw,
+                                slot2, heap2, atc2, ciw2):
+    w = ot.pack(slot, heap, acc, atc, ciw)
+    w2 = ot.with_slot(w, slot2)
+    assert int(ot.slot_of(w2)) == slot2 and int(ot.heap_of(w2)) == heap
+    w3 = ot.with_heap(w, heap2)
+    assert int(ot.heap_of(w3)) == heap2 and int(ot.slot_of(w3)) == slot
+    w4 = ot.with_atc(w, atc2)
+    assert int(ot.atc_of(w4)) == atc2 and int(ot.ciw_of(w4)) == ciw
+    w5 = ot.with_ciw(w, ciw2)
+    assert int(ot.ciw_of(w5)) == ciw2 and int(ot.access_of(w5)) == acc
+
+
+def test_record_access_idempotent_and_armed():
+    tbl = ot.make_table(8)
+    tbl = tbl.at[jnp.arange(4)].set(ot.pack(jnp.arange(4, dtype=jnp.uint32),
+                                            ot.NEW))
+    ids = jnp.asarray([0, 1, 1, 1, -1], jnp.int32)
+    t1 = ot.record_access(tbl, ids, armed=False)
+    assert int(ot.access_of(t1[1])) == 1
+    assert int(ot.atc_of(t1[1])) == 0            # unarmed: no ATC
+    # idempotent: second pass changes nothing
+    t2 = ot.record_access(t1, ids, armed=False)
+    assert bool(jnp.all(t1 == t2))
+    # armed: ATC bumps (saturating), dead/invalid ids untouched
+    t3 = ot.record_access(tbl, ids, armed=True)
+    assert int(ot.atc_of(t3[1])) >= 1
+    assert int(ot.access_of(t3[7])) == 0
+    # clear wipes access+atc but keeps slot/heap/ciw
+    t4 = ot.clear_access_and_atc(t3)
+    assert int(ot.access_of(t4[1])) == 0 and int(ot.atc_of(t4[1])) == 0
+    assert int(ot.slot_of(t4[1])) == 1

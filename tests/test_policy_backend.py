@@ -1,0 +1,101 @@
+"""MIAD policy (invariant 5) + backend behaviour/obliviousness."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import backend as be
+from repro.core import object_table as ot
+from repro.core import policy
+from repro.core import pool as pl
+
+MCFG = policy.MiadConfig()
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.floats(1.0, 16.0), st.integers(0, 10),
+       st.integers(0, 1000), st.integers(1, 1000))
+def test_miad_bounds_and_monotonicity(ct, calm, promos, accesses):
+    promos = min(promos, accesses)
+    new_ct, new_calm, rate, ok = policy.update(
+        MCFG, jnp.asarray(ct, jnp.float32), jnp.asarray(calm),
+        jnp.asarray(promos), jnp.asarray(accesses))
+    # bounds
+    assert MCFG.c_min - 1e-6 <= float(new_ct) <= MCFG.c_max + 1e-6
+    if rate > MCFG.target:
+        # multiplicative increase (strict unless already at max)
+        assert float(new_ct) >= ct or ct >= MCFG.c_max - 1e-6
+        assert int(new_calm) == 0
+    else:
+        assert float(new_ct) <= ct or ct <= MCFG.c_min + 1e-6
+        assert int(new_calm) == calm + 1
+
+
+def _stats(n=8, occ=None, ref=None, region=None):
+    occ = jnp.asarray(occ if occ is not None else [4] * n, jnp.int32)
+    ref = jnp.asarray(ref if ref is not None else [False] * n)
+    region = jnp.asarray(region if region is not None
+                         else [ot.COLD] * n, jnp.int8)
+    return {"occupancy": occ, "referenced": ref, "region": region,
+            "tier": jnp.zeros(n, jnp.int8),
+            "evict": jnp.zeros(n, jnp.int8)}
+
+
+PCFG = pl.make_config(max_objects=64, slot_words=4, sb_slots=8, slack=1.0)
+
+
+def test_backend_interface_is_object_oblivious():
+    """The backend signature admits ONLY superblock-level inputs — this
+    is the architectural decoupling, checked at the API boundary."""
+    import inspect
+    sig = inspect.signature(be.step)
+    assert set(sig.parameters) == {"cfg", "pool_cfg", "stats", "tier",
+                                   "evict", "proactive_ok"}
+
+
+def test_reactive_prefers_unreferenced():
+    n = PCFG.n_sbs
+    ref = [i % 2 == 0 for i in range(n)]         # even sbs referenced
+    stats = _stats(n, ref=ref)
+    cfg = be.BackendConfig(kind="reactive",
+                           hbm_target_bytes=(n // 2) * PCFG.sb_bytes)
+    tier, evict = be.step(cfg, PCFG, stats, stats["tier"], stats["evict"],
+                          jnp.asarray(False))
+    demoted = np.asarray(tier) == pl.HOST
+    # all demoted sbs are unreferenced ones
+    assert demoted.sum() == n // 2
+    assert not any(demoted[i] and ref[i] for i in range(n))
+
+
+def test_cap_backend_is_hotness_blind():
+    n = PCFG.n_sbs
+    ref = [True] * n                              # everything referenced
+    stats = _stats(n, ref=ref)
+    cfg = be.BackendConfig(kind="cap",
+                           hbm_target_bytes=2 * PCFG.sb_bytes)
+    tier, _ = be.step(cfg, PCFG, stats, stats["tier"], stats["evict"],
+                      jnp.asarray(False))
+    # cap evicts regardless of referenced bits
+    assert (np.asarray(tier) == pl.HOST).sum() == n - 2
+
+
+def test_proactive_gated_by_miad():
+    n = PCFG.n_sbs
+    stats = _stats(n)
+    evict0 = jnp.full((n,), pl.CANDIDATE, jnp.int8)
+    cfg = be.BackendConfig(kind="proactive")
+    tier, evict = be.step(cfg, PCFG, stats, stats["tier"], evict0,
+                          jnp.asarray(False))
+    assert (np.asarray(tier) == pl.HOST).sum() == 0   # gate closed
+    tier, evict = be.step(cfg, PCFG, stats, stats["tier"], evict0,
+                          jnp.asarray(True))
+    assert (np.asarray(tier) == pl.HOST).sum() == n   # gate open
+
+
+def test_null_backend_never_reclaims():
+    stats = _stats(PCFG.n_sbs)
+    cfg = be.BackendConfig(kind="null")
+    tier, evict = be.step(cfg, PCFG, stats, stats["tier"],
+                          jnp.full((PCFG.n_sbs,), pl.CANDIDATE, jnp.int8),
+                          jnp.asarray(True))
+    assert (np.asarray(tier) == pl.HBM).all()

@@ -1,0 +1,173 @@
+"""HadesPool + Object Collector invariants (DESIGN.md §5), property-based.
+
+1. slot uniqueness — no two live objects share a slot
+2. content preservation — read-through value identical under any
+   interleaving of collector passes
+3. epoch safety — objects with ATC > 0 are never moved
+4. heap coherence — table heap field matches the region of its slot
+7. accounting conservation — a superblock is in exactly one tier
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import backend as be
+from repro.core import collector as col
+from repro.core import object_table as ot
+from repro.core import pool as pl
+
+CFG = pl.make_config(max_objects=64, slot_words=4, sb_slots=8,
+                     page_slots=4, slack=2.0)
+CCFG = col.CollectorConfig()
+
+
+def fresh_pool(n_alloc=32):
+    st_ = pl.init(CFG)
+    vals = jnp.arange(n_alloc * 4, dtype=jnp.float32).reshape(n_alloc, 4)
+    st_ = pl.alloc(CFG, st_, jnp.arange(n_alloc, dtype=jnp.int32), vals)
+    return st_, vals
+
+
+def check_invariants(state):
+    tbl = np.asarray(state["table"])
+    owner = np.asarray(state["slot_owner"])
+    live = np.nonzero((tbl >> ot.HEAP_SHIFT) & 0b11 != ot.FREE)[0]
+    live = [i for i in range(len(tbl))
+            if int(ot.heap_of(state["table"][i])) != ot.FREE]
+    slots = [int(ot.slot_of(state["table"][i])) for i in live]
+    # 1. slot uniqueness
+    assert len(slots) == len(set(slots)), "slot collision"
+    for i, s in zip(live, slots):
+        # owner inverse mapping coherent
+        assert owner[s] == i, f"owner[{s}]={owner[s]} != {i}"
+        # 4. heap coherence: heap field matches slot's region
+        heap = int(ot.heap_of(state["table"][i]))
+        lo, hi = CFG.region(heap)
+        assert lo <= s < hi, f"obj {i} heap {heap} slot {s} not in region"
+    # owner table has no stale entries
+    for s in range(CFG.n_slots):
+        if owner[s] >= 0:
+            assert int(ot.slot_of(state["table"][owner[s]])) == s
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.lists(st.integers(0, 31), min_size=1, max_size=10),
+                min_size=1, max_size=8),
+       st.booleans())
+def test_content_preserved_any_interleaving(windows, arm_last):
+    """Property: after arbitrary access patterns + collector passes (with
+    and without armed windows), every object reads back its value."""
+    state, vals = fresh_pool(32)
+    for w, ids in enumerate(windows):
+        if arm_last and w == len(windows) - 1:
+            state = col.arm(state)
+        got, state = pl.read(CFG, state, jnp.asarray(ids, jnp.int32))
+        want = np.asarray(vals)[np.asarray(ids)]
+        assert np.allclose(np.asarray(got), want), "read-through mismatch"
+        state, _ = col.collect(CFG, CCFG, state)
+        check_invariants(state)
+    got, state = pl.read(CFG, state, jnp.arange(32, dtype=jnp.int32))
+    assert np.allclose(np.asarray(got), np.asarray(vals))
+
+
+def test_epoch_safety_atc_blocks_moves():
+    """3: an object accessed during an ARMED window (ATC > 0) must not
+    migrate in that window's collect."""
+    state, _ = fresh_pool(16)
+    # make object 0 hot-eligible: access while armed
+    state = col.arm(state)
+    _, state = pl.read(CFG, state, jnp.asarray([0], jnp.int32))
+    before = int(ot.slot_of(state["table"][0]))
+    state, report = col.collect(CFG, CCFG, state)
+    after = int(ot.slot_of(state["table"][0]))
+    assert before == after, "ATC>0 object moved"
+    assert int(report["skipped_atc"]) >= 1
+    # unarmed access the next window -> it may move now
+    _, state = pl.read(CFG, state, jnp.asarray([0], jnp.int32))
+    state, _ = col.collect(CFG, CCFG, state)
+    assert int(ot.heap_of(state["table"][0])) == ot.HOT
+
+
+def test_classification_state_machine():
+    """Fig. 5: NEW -accessed-> HOT; idle CIW>C_t -> COLD; COLD -access->
+    HOT (a promotion)."""
+    state, _ = fresh_pool(8)
+    # access 0..3 repeatedly; leave 4..7 idle
+    for _ in range(8):
+        _, state = pl.read(CFG, state, jnp.arange(4, dtype=jnp.int32))
+        state, _ = col.collect(CFG, CCFG, state)
+    heaps = [int(ot.heap_of(state["table"][i])) for i in range(8)]
+    assert all(h == ot.HOT for h in heaps[:4])
+    assert all(h == ot.COLD for h in heaps[4:])
+    # touch a cold object -> promoted next collect
+    _, state = pl.read(CFG, state, jnp.asarray([6], jnp.int32))
+    state, rep = col.collect(CFG, CCFG, state)
+    assert int(ot.heap_of(state["table"][6])) == ot.HOT
+
+
+def test_free_and_realloc():
+    state, vals = fresh_pool(16)
+    state = pl.free(CFG, state, jnp.asarray([3, 5], jnp.int32))
+    assert int(ot.heap_of(state["table"][3])) == ot.FREE
+    check_invariants(state)
+    nv = jnp.full((2, 4), 9.0, jnp.float32)
+    state = pl.alloc(CFG, state, jnp.asarray([3, 40], jnp.int32), nv)
+    got, state = pl.read(CFG, state, jnp.asarray([3, 40], jnp.int32))
+    assert np.allclose(np.asarray(got), 9.0)
+    check_invariants(state)
+
+
+def test_alloc_spills_when_new_full():
+    """Allocation never fails while the pool has space (NEW->COLD->HOT)."""
+    state = pl.init(CFG)
+    n = CFG.n_slots  # more than NEW region
+    k = min(n, CFG.max_objects)
+    vals = jnp.ones((k, 4), jnp.float32)
+    state = pl.alloc(CFG, state, jnp.arange(k, dtype=jnp.int32), vals)
+    live = sum(int(ot.heap_of(state["table"][i])) != ot.FREE
+               for i in range(k))
+    assert live == k
+    check_invariants(state)
+
+
+def test_fault_accounting_and_tier_conservation():
+    """7: demote -> host bytes + rss bytes partition occupied superblocks;
+    faulting back restores."""
+    state, vals = fresh_pool(32)
+    # cool everything into COLD then demote via proactive backend
+    for _ in range(6):
+        state, rep = col.collect(CFG, CCFG, state)
+    stats = pl.superblock_stats(CFG, state)
+    becfg = be.BackendConfig(kind="proactive")
+    tier, evict = be.step(becfg, CFG, stats, state["sb_tier"],
+                          state["sb_evict"], jnp.asarray(True))
+    state = dict(state, sb_tier=tier, sb_evict=evict)
+    rss0 = float(pl.rss_bytes(CFG, state))
+    host0 = float(pl.host_bytes(CFG, state))
+    assert host0 > 0, "nothing was demoted"
+    # read a demoted object: fault + promote back; content intact
+    got, state = pl.read(CFG, state, jnp.asarray([7], jnp.int32))
+    assert np.allclose(np.asarray(got)[0], np.asarray(vals)[7])
+    assert int(state["total_faults"]) >= 1
+    assert float(pl.host_bytes(CFG, state)) < host0
+    # conservation: every occupied sb is in exactly one tier
+    assert float(pl.rss_bytes(CFG, state)) + \
+        float(pl.host_bytes(CFG, state)) >= rss0 + host0 - CFG.sb_bytes
+
+
+def test_compact_heap_preserves_content():
+    state, vals = fresh_pool(24)
+    # fragment the NEW region
+    state = pl.free(CFG, state, jnp.asarray([1, 3, 5, 7, 9], jnp.int32))
+    state = col.compact_heap(CFG, state, ot.NEW)
+    check_invariants(state)
+    keep = [i for i in range(24) if i not in (1, 3, 5, 7, 9)]
+    got, state = pl.read(CFG, state, jnp.asarray(keep, jnp.int32))
+    assert np.allclose(np.asarray(got), np.asarray(vals)[keep])
+    # dense: live slots of NEW form a prefix
+    lo, hi = CFG.region(ot.NEW)
+    owner = np.asarray(state["slot_owner"][lo:hi])
+    nz = np.nonzero(owner >= 0)[0]
+    assert len(nz) == 0 or nz.max() == len(nz) - 1

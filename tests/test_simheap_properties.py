@@ -1,0 +1,95 @@
+"""Property-based invariants for the byte-granular SimHeap (the paper's
+evaluation substrate): under ANY interleaving of alloc/access/free/
+collect/backend ops, the address space stays consistent."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.simheap import ALIGN, NEW, PAGE, SimConfig, SimHeap
+
+ops = st.lists(
+    st.one_of(
+        st.tuples(st.just("alloc"), st.integers(1, 20),
+                  st.integers(16, 2048)),
+        st.tuples(st.just("access"), st.integers(0, 199)),
+        st.tuples(st.just("free"), st.integers(0, 199)),
+        st.tuples(st.just("collect"), st.just(0)),
+        st.tuples(st.just("backend"), st.just(0)),
+    ), min_size=5, max_size=40)
+
+
+def check_no_overlap(h: SimHeap):
+    live = np.nonzero(h.heap >= 0)[0]
+    if len(live) == 0:
+        return
+    order = np.argsort(h.addr[live])
+    a = h.addr[live][order]
+    sz = (h.size[live][order] + ALIGN - 1) // ALIGN * ALIGN
+    assert (a[1:] >= a[:-1] + sz[:-1]).all(), "live objects overlap"
+    # every live object lies inside its heap's address range
+    for i in live:
+        hp = int(h.heap[i])
+        base = h.base[hp]
+        assert base <= h.addr[i] < base + h.cfg.heap_bytes
+        assert h.addr[i] + h.size[i] <= base + h.cfg.heap_bytes
+
+
+@settings(max_examples=30, deadline=None)
+@given(ops, st.sampled_from(["reactive", "proactive", "cap", "null"]))
+def test_simheap_invariants_any_interleaving(op_list, backend):
+    cfg = SimConfig(max_objects=256, heap_bytes=1 << 20, backend=backend,
+                    hbm_target_bytes=1 << 18)
+    h = SimHeap(cfg, seed=0)
+    next_id = 0
+    live_ids = set()
+    for op in op_list:
+        if op[0] == "alloc":
+            _, n, size = op
+            n = min(n, 256 - next_id)
+            if n <= 0:
+                continue
+            ids = np.arange(next_id, next_id + n)
+            h.alloc(ids, np.full(n, size))
+            live_ids.update(ids.tolist())
+            next_id += n
+        elif op[0] == "access":
+            if live_ids:
+                pick = [i for i in (op[1], op[1] // 2) if i in live_ids]
+                if pick:
+                    h.access_objects(np.asarray(pick))
+        elif op[0] == "free":
+            if op[1] in live_ids:
+                h.free(np.asarray([op[1]]))
+                live_ids.discard(op[1])
+        elif op[0] == "collect":
+            rep = h.collect()
+            assert 0 <= rep["promotion_rate"] <= 1
+            assert 0 < rep["page_utilization"] <= 1
+            assert cfg.ciw_min <= h.ciw_threshold <= cfg.ciw_max
+        elif op[0] == "backend":
+            h.backend_step()
+        check_no_overlap(h)
+    # accounting: rss never exceeds the mapped address space
+    assert 0 <= h.rss_bytes() <= 3 * cfg.heap_bytes + 2 * (1 << 21)
+    # live-byte ledgers never go negative
+    assert all(v >= 0 for v in h.live_bytes.values())
+
+
+def test_simheap_emergency_compact_charges_faults():
+    """Compacting a region with paged-out pages must fault them in and
+    say so (the honesty rule for COLD compaction)."""
+    cfg = SimConfig(max_objects=64, heap_bytes=1 << 16,
+                    backend="proactive")
+    h = SimHeap(cfg, seed=0)
+    h.alloc(np.arange(32), np.full(32, 1024))
+    # cool everything into COLD and page it out
+    for _ in range(6):
+        h.collect()
+        h.backend_step()
+    paged = int((h.evict == 2).sum())
+    if paged == 0:
+        pytest.skip("backend never paged out at this scale")
+    before = h.total_faults
+    h._compact(2)  # COLD heap emergency compaction
+    assert h.total_faults > before
