@@ -1,6 +1,8 @@
 """Shared benchmark harness utilities."""
 from __future__ import annotations
 
+import json
+import os
 import time
 from typing import Callable, Dict, List
 
@@ -54,3 +56,14 @@ def timed(fn: Callable, *args, warmup: int = 1, iters: int = 5) -> float:
 def emit(name: str, us_per_call: float, derived: str) -> None:
     """One CSV row on stdout: name,us_per_call,derived."""
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def emit_json(name: str, record: Dict, out_dir: str = ".") -> str:
+    """Write one benchmark record to `BENCH_<name>.json` (the repo's perf
+    trajectory artifacts) and echo it to stdout. Returns the path."""
+    path = os.path.join(out_dir, f"BENCH_{name}.json")
+    with open(path, "w") as fh:
+        json.dump(record, fh, indent=2, sort_keys=True)
+        fh.write("\n")
+    print(f"{name}: {json.dumps(record, sort_keys=True)}")
+    return path

@@ -7,10 +7,13 @@
   policy        MIAD feedback on the promotion rate
   backend       page-level reclamation backends (reactive/proactive/cap/null)
   page_util     the Page Utilization metric
-  frontend      Hades: orchestration wrapper wiring the above
+  engine        fused window execution: the whole access->collect->backend
+                loop as one jitted lax.scan (one dispatch per window)
+  frontend      Hades: thin per-op compatibility wrapper over the engine
   simheap       byte-granular address-space simulator for the paper's
                 YCSB/CrestDB evaluation (numpy, trace-driven)
 """
 from repro.core import object_table  # noqa: F401
+from repro.core.engine import Engine, EngineOptions  # noqa: F401
 from repro.core.frontend import Hades, HadesOptions  # noqa: F401
 from repro.core.pool import PoolConfig, make_config  # noqa: F401

@@ -19,6 +19,16 @@ Each collect pass, run between application steps (the migration window):
 
 Everything is a fixed-shape array program: "no objects to move" is the
 all-false mask, so the pass jits once and runs every window.
+
+Execution shape: classification is one table sweep (`classify`, optionally
+the Pallas `access_scan` kernel when `CollectorConfig.use_pallas`), and the
+two-direction migration is one fused plan — destination slots for HOT and
+COLD movers are computed back-to-back on the slot-owner array, then ALL
+payload copies execute as a single data movement (the Pallas `migrate`
+kernel, or one functional scatter on the jnp oracle path). Hot moves are
+ordered before cold moves, which keeps the kernel's sequential-grid
+contract: a cold mover may land in a slot a hot mover vacated, but no move
+reads a slot an earlier move overwrote.
 """
 from __future__ import annotations
 
@@ -40,51 +50,31 @@ class CollectorConfig:
     # keep NEW objects in NEW until they show a verdict (paper: NEW heap
     # absorbs fresh allocations; they migrate on first classification)
     promote_new_on_access: bool = True
+    # route the table sweep + payload copies through the Pallas kernels
+    # (access_scan / migrate); False keeps the pure-jnp oracle path. Both
+    # paths are bit-identical (tests/test_engine.py asserts it).
+    use_pallas: bool = False
 
 
-def _move_to_region(cfg: pl.PoolConfig, state: Dict, move_mask: jax.Array,
-                    dest_heap: int) -> Tuple[Dict, jax.Array]:
-    """Migrate all objects with move_mask=True into `dest_heap`'s region.
-    Objects that don't fit (region full) are left in place (retried next
-    window). Returns (state, n_moved)."""
-    lo, hi = cfg.region(dest_heap)
+def classify(pool_cfg: pl.PoolConfig, col_cfg: CollectorConfig,
+             state: Dict) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One sweep over the table: update CIW lanes and emit migration masks
+    (Fig. 5 state machine, ATC lock-free rule folded in). Returns
+    (table_with_new_ciw, to_hot, to_cold)."""
     tbl = state["table"]
-    ids = jnp.arange(cfg.max_objects, dtype=jnp.int32)
-    words = tbl
-    src_slot = ot.slot_of(words).astype(jnp.int32)
+    if col_cfg.use_pallas:
+        from repro.kernels import ops as kops
+        # with_hist=False: referenced bits must be recomputed from the
+        # POST-migration layout anyway (superblock_stats), so the
+        # kernel's pre-move histogram would be dead work
+        new_tbl, to_hot, to_cold, _ = kops.access_scan(
+            tbl, state["ciw_threshold"], sb_slots=pool_cfg.sb_slots,
+            n_sbs=pool_cfg.n_sbs, with_hist=False)
+        if not col_cfg.promote_new_on_access:
+            # kernel bakes in NEW-promotes-on-access; mask it back out
+            to_hot &= ot.heap_of(tbl) != ot.NEW
+        return new_tbl, to_hot, to_cold
 
-    # rank movers; grab that many free slots from the region (dense-first)
-    rank = jnp.cumsum(move_mask.astype(jnp.int32)) - 1
-    free = state["slot_owner"][lo:hi] == -1
-    csum = jnp.cumsum(free.astype(jnp.int32))
-    n_free = csum[-1]
-    fr = jnp.where(free, csum - 1, hi - lo)
-    slot_for_rank = jnp.full((hi - lo + 1,), 0, jnp.int32) \
-        .at[fr].set(jnp.arange(hi - lo, dtype=jnp.int32), mode="drop")
-    dst_rel = slot_for_rank[jnp.clip(rank, 0, hi - lo)]
-    ok = move_mask & (rank < n_free) & (rank >= 0)
-    dst_slot = jnp.where(ok, dst_rel + lo, src_slot)
-
-    # data copy (functional: reads pre-move data, so src/dst aliasing with
-    # in-region compaction is safe by construction)
-    data = state["data"].at[jnp.where(ok, dst_slot, cfg.n_slots)].set(
-        state["data"][src_slot], mode="drop")
-    # slot ownership: clear src, claim dst
-    owner = state["slot_owner"].at[jnp.where(ok, src_slot, cfg.n_slots)] \
-        .set(-1, mode="drop")
-    owner = owner.at[jnp.where(ok, dst_slot, cfg.n_slots)].set(
-        ids, mode="drop")
-    # table word: new slot + heap (flags preserved; cleared later in pass)
-    new_words = ot.with_heap(ot.with_slot(words, dst_slot.astype(jnp.uint32)),
-                             dest_heap)
-    tbl = jnp.where(ok, new_words, tbl)
-    return dict(state, data=data, slot_owner=owner, table=tbl), jnp.sum(ok)
-
-
-def collect(pool_cfg: pl.PoolConfig, col_cfg: CollectorConfig,
-            state: Dict) -> Tuple[Dict, Dict[str, jax.Array]]:
-    """One Object Collector pass. Returns (state, report)."""
-    tbl = state["table"]
     live = ot.is_live(tbl)
     acc = (ot.access_of(tbl) == 1) & live
     atc = ot.atc_of(tbl)
@@ -104,13 +94,95 @@ def collect(pool_cfg: pl.PoolConfig, col_cfg: CollectorConfig,
     to_hot &= movable
     to_cold &= movable
 
-    # write back CIW before moving (moves preserve flag bits)
-    tbl = (tbl & ~(ot.CIW_MASK << ot.CIW_SHIFT)) | \
+    new_tbl = (tbl & ~(ot.CIW_MASK << ot.CIW_SHIFT)) | \
         (ciw.astype(jnp.uint32) << ot.CIW_SHIFT)
-    state = dict(state, table=tbl)
+    return new_tbl, to_hot, to_cold
 
-    state, n_hot = _move_to_region(pool_cfg, state, to_hot, ot.HOT)
-    state, n_cold = _move_to_region(pool_cfg, state, to_cold, ot.COLD)
+
+def _plan_moves(cfg: pl.PoolConfig, owner: jax.Array, table: jax.Array,
+                move_mask: jax.Array, dest_heap: int
+                ) -> Tuple[jax.Array, jax.Array, jax.Array,
+                           jax.Array, jax.Array]:
+    """Assign dense destination slots in `dest_heap`'s region to every
+    object with move_mask=True (movers that don't fit are dropped —
+    retried next window). Updates metadata only; the payload copy is
+    deferred to the fused data mover. Returns (src, dst, ok, owner,
+    table)."""
+    lo, hi = cfg.region(dest_heap)
+    ids = jnp.arange(cfg.max_objects, dtype=jnp.int32)
+    src = ot.slot_of(table).astype(jnp.int32)
+
+    # rank movers; grab that many free slots from the region (dense-first)
+    rank = jnp.cumsum(move_mask.astype(jnp.int32)) - 1
+    free = owner[lo:hi] == -1
+    csum = jnp.cumsum(free.astype(jnp.int32))
+    n_free = csum[-1]
+    fr = jnp.where(free, csum - 1, hi - lo)
+    slot_for_rank = jnp.full((hi - lo + 1,), 0, jnp.int32) \
+        .at[fr].set(jnp.arange(hi - lo, dtype=jnp.int32), mode="drop")
+    dst_rel = slot_for_rank[jnp.clip(rank, 0, hi - lo)]
+    ok = move_mask & (rank < n_free) & (rank >= 0)
+    dst = jnp.where(ok, dst_rel + lo, src)
+
+    # slot ownership: clear src, claim dst
+    owner = owner.at[jnp.where(ok, src, cfg.n_slots)].set(-1, mode="drop")
+    owner = owner.at[jnp.where(ok, dst, cfg.n_slots)].set(ids, mode="drop")
+    # table word: new slot + heap (flags preserved; cleared later in pass)
+    new_words = ot.with_heap(ot.with_slot(table, dst.astype(jnp.uint32)),
+                             dest_heap)
+    table = jnp.where(ok, new_words, table)
+    return src, dst, ok, owner, table
+
+
+def migrate(cfg: pl.PoolConfig, state: Dict, to_hot: jax.Array,
+            to_cold: jax.Array, *, use_pallas: bool = False
+            ) -> Tuple[Dict, jax.Array, jax.Array]:
+    """Fused two-direction migration: plan HOT then COLD destinations on
+    the metadata (so cold movers can claim slots hot movers vacate, same
+    as the old sequential passes), then execute every payload copy in ONE
+    data movement. Returns (state, n_hot, n_cold).
+
+    Safety of the single copy: hot dsts are free HOT-region slots and cold
+    dsts are free (possibly just-vacated) COLD-region slots, so all dsts
+    are distinct; no cold src is ever a hot dst, so in hot-then-cold order
+    no move reads a slot an earlier move wrote — the `migrate` kernel's
+    sequential-grid contract, and trivially true for the functional jnp
+    scatter (which gathers all sources pre-write)."""
+    src_h, dst_h, ok_h, owner, tbl = _plan_moves(
+        cfg, state["slot_owner"], state["table"], to_hot, ot.HOT)
+    src_c, dst_c, ok_c, owner, tbl = _plan_moves(
+        cfg, owner, tbl, to_cold, ot.COLD)
+    src = jnp.concatenate([src_h, src_c])
+    dst = jnp.concatenate([dst_h, dst_c])
+    ok = jnp.concatenate([ok_h, ok_c])
+    if use_pallas:
+        from repro.kernels import ops as kops
+        data = kops.migrate(state["data"], src, dst, ok)
+    else:
+        data = state["data"].at[jnp.where(ok, dst, cfg.n_slots)].set(
+            state["data"][src], mode="drop")
+    state = dict(state, data=data, slot_owner=owner, table=tbl)
+    return state, jnp.sum(ok_h), jnp.sum(ok_c)
+
+
+def collect(pool_cfg: pl.PoolConfig, col_cfg: CollectorConfig,
+            state: Dict) -> Tuple[Dict, Dict[str, jax.Array]]:
+    """One Object Collector pass. Returns (state, report)."""
+    tbl = state["table"]
+    live = ot.is_live(tbl)
+    acc = (ot.access_of(tbl) == 1) & live
+    atc = ot.atc_of(tbl)
+    heap = ot.heap_of(tbl)
+    ct = jnp.floor(state["ciw_threshold"]).astype(jnp.uint32)
+
+    # one table sweep: CIW update + migration masks
+    new_tbl, to_hot, to_cold = classify(pool_cfg, col_cfg, state)
+    state = dict(state, table=new_tbl)
+
+    # fused two-direction migration, one data movement
+    state, n_hot, n_cold = migrate(pool_cfg, state, to_hot, to_cold,
+                                   use_pallas=col_cfg.use_pallas)
+    ciw = ot.ciw_of(new_tbl)
     skipped_atc = jnp.sum(live & (atc > 0) &
                           (acc | ((ciw > ct) & (heap != ot.COLD))))
 

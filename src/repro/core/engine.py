@@ -1,0 +1,356 @@
+"""Fused window-execution engine — one device dispatch per serving window.
+
+The paper's 3%-overhead claim is about *tracking* cost, not dispatch cost;
+a frontend that pays a host round-trip per op (separately jitted
+read/write/alloc with a Python tick in between) measures the wrong thing.
+This engine executes an entire serving window — `collect_every` batched
+ops, the Object Collector pass, MIAD, MADV_COLD candidate marking, and the
+backend step — as ONE `jax.jit`-compiled `lax.scan`:
+
+    trace:  {"op": [T], "ids": [T, K], "values": [T, K, W]}
+      |                       (K ops per step, ids < 0 are padding)
+      v
+    lax.scan over T steps:
+        lax.switch(op)  -> pool.read / write / alloc / free
+        step clock +1
+        lax.cond(step % every == every-1 & overlap) -> arm ATC window
+        lax.cond(step % every == 0) -> collect + backend  (fused)
+      |
+      v
+    (state', read outputs [T, K, W], per-step reports)
+
+Nothing inside a window may sync to the host; the per-step report pytree
+has a fixed shape (zeros on non-collect steps, `did_collect` marks the
+real ones) so callers pull results *after* the window. The `Hades`
+frontend wrapper (core/frontend.py) rides the same machinery one step at
+a time via `apply_step`, so the step-by-step and fused paths are
+bit-identical (tests/test_engine.py asserts it).
+
+Every op in a trace advances the window clock — including `free` (the
+clock counts ops, not accesses; a data-dependent clock would not scan).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import backend as be
+from repro.core import collector as col
+from repro.core import pool as pl
+
+# op codes for batched traces
+READ, WRITE, ALLOC, FREE = 0, 1, 2, 3
+OP_CODES = {"read": READ, "write": WRITE, "alloc": ALLOC, "free": FREE}
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineOptions:
+    """Static window/collector/backend configuration (hashable; closed
+    over by the jitted window program). Field-compatible with the old
+    `HadesOptions` — frontend.py aliases it."""
+    collect_every: int = 8
+    backend: be.BackendConfig = dataclasses.field(
+        default_factory=be.BackendConfig)
+    collector: col.CollectorConfig = dataclasses.field(
+        default_factory=col.CollectorConfig)
+    enabled: bool = True           # False = allocator-only (no tidying)
+    # Arm ATC tracking for the window preceding each collect. The paper's
+    # scope guards decrement on function EXIT; in a synchronous loop every
+    # step has exited before the collector runs, so nothing is in flight
+    # and arming would only veto migrations spuriously. Set True when the
+    # runtime overlaps step dispatch with collection (async serving) —
+    # then ATC>0 marks objects a concurrent step may still dereference.
+    overlap_collect: bool = False
+
+
+def zero_report() -> Dict[str, jax.Array]:
+    """The no-collect report: same pytree structure/dtypes as a real one
+    so `lax.cond` branches agree."""
+    i32 = functools.partial(jnp.zeros, (), jnp.int32)
+    f32 = functools.partial(jnp.zeros, (), jnp.float32)
+    return {
+        "moved_to_hot": i32(), "moved_to_cold": i32(),
+        "skipped_atc": i32(),
+        "promotion_rate": f32(),
+        "proactive_ok": jnp.zeros((), jnp.bool_),
+        "ciw_threshold": f32(),
+        "win_accesses": i32(), "win_faults": i32(),
+        "rss_bytes": f32(), "host_bytes": f32(),
+        "did_collect": jnp.zeros((), jnp.bool_),
+    }
+
+
+def collect_and_backend(pool_cfg: pl.PoolConfig, col_cfg: col.CollectorConfig,
+                        be_cfg: be.BackendConfig, state: Dict
+                        ) -> Tuple[Dict, Dict[str, jax.Array]]:
+    """Collector pass + backend step as one fused transition. The backend
+    sees the closing window's superblock stats (pre-clear), exactly as the
+    old two-dispatch Hades.collect did; RSS/host byte gauges are computed
+    on-device so callers never sync mid-window."""
+    state, report = col.collect(pool_cfg, col_cfg, state)
+    stats = report.pop("sb_stats")
+    tier, evict = be.step(be_cfg, pool_cfg, stats, state["sb_tier"],
+                          state["sb_evict"], report["proactive_ok"])
+    state = dict(state, sb_tier=tier, sb_evict=evict)
+    occupied = stats["occupancy"] > 0
+    sb_bytes = float(pool_cfg.sb_bytes)
+    report["rss_bytes"] = jnp.sum(
+        occupied & (tier == pl.HBM)).astype(jnp.float32) * sb_bytes
+    report["host_bytes"] = jnp.sum(
+        occupied & (tier == pl.HOST)).astype(jnp.float32) * sb_bytes
+    report["did_collect"] = jnp.ones((), jnp.bool_)
+    return state, report
+
+
+# ---------------------------------------------------------------------------
+# single step — the Hades wrapper's path (op/collect decisions are static:
+# the host knows the deterministic window clock, so no device cond needed)
+# ---------------------------------------------------------------------------
+def apply_step(pool_cfg: pl.PoolConfig, col_cfg: col.CollectorConfig,
+               be_cfg: be.BackendConfig, state: Dict, ids: jax.Array,
+               values: Optional[jax.Array], *, op: str,
+               do_arm: bool = False, do_collect: bool = False
+               ) -> Tuple[Dict, Optional[jax.Array], Dict[str, jax.Array]]:
+    """One op + its share of the window protocol, fused into a single
+    compiled program: apply `op`, then (statically) arm and/or run
+    collect+backend. Returns (state, read_values_or_None, report)."""
+    out = None
+    if op == "read":
+        out, state = pl.read(pool_cfg, state, ids)
+    elif op == "write":
+        state = pl.write(pool_cfg, state, ids, values)
+    elif op == "alloc":
+        state = pl.alloc(pool_cfg, state, ids, values)
+    elif op == "free":
+        state = pl.free(pool_cfg, state, ids)
+    else:
+        raise ValueError(op)
+    if do_arm:
+        state = col.arm(state)
+    if do_collect:
+        state, report = collect_and_backend(pool_cfg, col_cfg, be_cfg, state)
+    else:
+        report = zero_report()
+    return state, out, report
+
+
+# ---------------------------------------------------------------------------
+# fused window — the whole access->collect->backend loop in one dispatch
+# ---------------------------------------------------------------------------
+def _op_step(pool_cfg: pl.PoolConfig, state: Dict, xs: Dict
+             ) -> Tuple[Dict, jax.Array]:
+    """Apply one traced op batch (the scan body's op dispatch)."""
+    ids, values = xs["ids"], xs["values"]
+
+    def b_read(s):
+        vals, s2 = pl.read(pool_cfg, s, ids)
+        return s2, vals.astype(values.dtype)
+
+    def b_write(s):
+        return pl.write(pool_cfg, s, ids, values), jnp.zeros_like(values)
+
+    def b_alloc(s):
+        return pl.alloc(pool_cfg, s, ids, values), jnp.zeros_like(values)
+
+    def b_free(s):
+        return pl.free(pool_cfg, s, ids), jnp.zeros_like(values)
+
+    return jax.lax.switch(xs["op"], [b_read, b_write, b_alloc, b_free],
+                          state)
+
+
+def make_run_window(pool_cfg: pl.PoolConfig, opts: EngineOptions):
+    """Build the jitted window programs. The returned
+    run(state, trace, step0) -> (state, outs [T,K,W], reports {[T]...})
+    dispatches ONE device program for the whole trace.
+
+    Two compiled shapes exist behind the same signature:
+
+      * window-aligned (T % collect_every == 0 and step0 % collect_every
+        == 0, the production case): an outer scan over whole windows —
+        inner cond-FREE scan over the first every-1 ops, then statically
+        arm (if overlapping), apply the window-closing op, and run
+        collect+backend. No `lax.cond` anywhere (a per-step cond costs
+        real time on CPU), collect work appears once per window.
+      * generic (any T/step0): per-step scan with a cond-gated collect —
+        the semantics reference for arbitrary clock offsets.
+
+    Reports always come back per-STEP (zeros on non-collect steps,
+    `did_collect` marks window closers) so both shapes look identical to
+    callers; `step0` is the op-clock value BEFORE the trace, keeping the
+    cadence aligned across successive calls."""
+    col_cfg, be_cfg = opts.collector, opts.backend
+    every = int(opts.collect_every)
+    cab = functools.partial(collect_and_backend, pool_cfg, col_cfg, be_cfg)
+
+    # -- generic shape: per-step cond ---------------------------------------
+    def step_fn(carry, xs):
+        state, step = carry
+        state, out = _op_step(pool_cfg, state, xs)
+        step = step + 1
+        if opts.enabled:
+            if opts.overlap_collect:
+                state = jax.lax.cond(step % every == every - 1,
+                                     col.arm, lambda s: s, state)
+            state, report = jax.lax.cond(
+                step % every == 0, cab, lambda s: (s, zero_report()), state)
+        else:
+            report = zero_report()
+        return (state, step), {"out": out, "report": report}
+
+    def run_generic(state, trace, step0):
+        step0 = jnp.asarray(step0, jnp.int32)
+        (state, _), ys = jax.lax.scan(step_fn, (state, step0), trace)
+        return state, ys["out"], ys["report"]
+
+    # -- window-aligned shape: cond-free ------------------------------------
+    def window_body(state, wtrace):
+        if every > 1:
+            head = jax.tree.map(lambda v: v[:every - 1], wtrace)
+            state, outs = jax.lax.scan(
+                functools.partial(_op_step, pool_cfg), state, head)
+            # arm fires AFTER op every-1 (the generic path's
+            # step % every == every-1 check runs post-op)
+            if opts.enabled and opts.overlap_collect:
+                state = col.arm(state)
+        last = jax.tree.map(lambda v: v[every - 1], wtrace)
+        state, out_last = _op_step(pool_cfg, state, last)
+        if every == 1 and opts.enabled and opts.overlap_collect:
+            # degenerate cadence: every step is both the arming and the
+            # closing step, and the generic path arms post-op
+            state = col.arm(state)
+        if opts.enabled:
+            state, report = cab(state)
+        else:
+            report = zero_report()
+        outs = (jnp.concatenate([outs, out_last[None]], axis=0)
+                if every > 1 else out_last[None])
+        return state, {"out": outs, "report": report}
+
+    def run_aligned(state, trace):
+        t = trace["op"].shape[0]
+        wtrace = jax.tree.map(
+            lambda v: v.reshape((t // every, every) + v.shape[1:]), trace)
+        state, ys = jax.lax.scan(window_body, state, wtrace)
+        outs = ys["out"].reshape((t,) + ys["out"].shape[2:])
+        # scatter the per-window reports into the per-step layout the
+        # generic shape produces (zeros except at window closers)
+        reports = jax.tree.map(
+            lambda z, w: jnp.broadcast_to(
+                z, (t,) + z.shape).at[every - 1::every].set(w),
+            zero_report(), ys["report"])
+        return state, outs, reports
+
+    jit_generic = jax.jit(run_generic)
+    jit_aligned = jax.jit(run_aligned)
+
+    def run(state, trace, step0=0):
+        t = int(trace["op"].shape[0])
+        if (isinstance(step0, int) and step0 % every == 0
+                and t % every == 0 and t > 0):
+            return jit_aligned(state, trace)
+        return jit_generic(state, trace, step0)
+
+    return run
+
+
+def make_trace(pool_cfg: pl.PoolConfig,
+               steps: Sequence[Tuple[str, jax.Array, Optional[jax.Array]]],
+               *, k: Optional[int] = None) -> Dict[str, jax.Array]:
+    """Pack a Python list of (op, ids, values_or_None) into the stacked
+    fixed-shape trace `run_window` scans over. Each step's ids are padded
+    to `k` with -1 (all pool ops drop negative ids); values are padded
+    with zeros and cast to the pool dtype."""
+    import numpy as np
+    if k is None:
+        k = max([1] + [len(np.atleast_1d(ids)) for _, ids, _ in steps])
+    w = pool_cfg.slot_words
+    dtype = jnp.dtype(pool_cfg.dtype)
+    t = len(steps)
+    op_a = np.zeros((t,), np.int32)
+    ids_a = np.full((t, k), -1, np.int32)
+    val_a = np.zeros((t, k, w), dtype)
+    for i, (op, ids, values) in enumerate(steps):
+        op_a[i] = OP_CODES[op]
+        ids = np.atleast_1d(np.asarray(ids, np.int32))
+        assert len(ids) <= k, f"step {i}: {len(ids)} ops > k={k}"
+        ids_a[i, :len(ids)] = ids
+        if values is not None:
+            val_a[i, :len(ids)] = np.asarray(values, dtype).reshape(-1, w)
+    return {"op": jnp.asarray(op_a), "ids": jnp.asarray(ids_a),
+            "values": jnp.asarray(val_a)}
+
+
+def window_reports(reports: Dict[str, jax.Array]) -> List[Dict[str, float]]:
+    """Host-side extraction of the real collect reports from a window's
+    stacked per-step report pytree (the only place a sync happens)."""
+    import numpy as np
+    host = {kk: np.asarray(v) for kk, v in reports.items()}
+    out = []
+    for i in np.nonzero(host["did_collect"])[0]:
+        out.append({kk: float(v[i]) for kk, v in host.items()})
+    return out
+
+
+class Engine:
+    """Holds the compiled entry points for one pool geometry + options.
+
+    `run_window` / `serve_steps` are the production path (one dispatch per
+    window); `step` is the per-op compatibility path the `Hades` wrapper
+    uses (one dispatch per op, collect fused into the op that closes the
+    window)."""
+
+    def __init__(self, pool_cfg: pl.PoolConfig,
+                 opts: Optional[EngineOptions] = None):
+        self.cfg = pool_cfg
+        self.opts = opts or EngineOptions()
+        self._run = make_run_window(pool_cfg, self.opts)
+        self._apply = jax.jit(
+            functools.partial(apply_step, pool_cfg, self.opts.collector,
+                              self.opts.backend),
+            static_argnames=("op", "do_arm", "do_collect"))
+        self._collect = jax.jit(functools.partial(
+            collect_and_backend, pool_cfg, self.opts.collector,
+            self.opts.backend))
+
+    def init(self) -> Dict:
+        return pl.init(self.cfg)
+
+    # -- fused path ---------------------------------------------------------
+    def run_window(self, state: Dict, trace: Dict[str, jax.Array],
+                   step0: int = 0):
+        """Execute `trace` (any number of steps/windows) as ONE dispatch."""
+        return self._run(state, trace, step0)
+
+    def serve_steps(self, state: Dict, trace: Dict[str, jax.Array],
+                    *, step0: int = 0, window: Optional[int] = None):
+        """Stream `trace` window-by-window (`window` steps per dispatch,
+        default `collect_every`) so reports can be consumed between
+        dispatches. Returns (state, outs [T,K,W], reports list)."""
+        t = trace["op"].shape[0]
+        window = window or self.opts.collect_every
+        outs, reps = [], []
+        for lo in range(0, t, window):
+            chunk = {kk: v[lo:lo + window] for kk, v in trace.items()}
+            state, out, rep = self._run(state, chunk, step0 + lo)
+            outs.append(out)
+            reps.extend(window_reports(rep))
+        if not outs:               # empty trace: clean no-op
+            return state, jnp.zeros_like(trace["values"]), reps
+        return state, jnp.concatenate(outs, axis=0), reps
+
+    # -- per-op compatibility path ------------------------------------------
+    def step(self, state: Dict, op: str, ids, values=None, *,
+             do_arm: bool = False, do_collect: bool = False):
+        ids = jnp.asarray(ids, jnp.int32)
+        if values is not None:
+            values = jnp.asarray(values)
+        return self._apply(state, ids, values, op=op, do_arm=do_arm,
+                           do_collect=do_collect)
+
+    def collect_now(self, state: Dict):
+        return self._collect(state)

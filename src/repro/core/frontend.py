@@ -12,42 +12,32 @@
                                     backend.step (reactive / proactive /
                                     cap / null — unmodified, oblivious)
 
-The class is a thin stateful convenience wrapper: all state lives in a
-pytree (`self.state`) and every transition is a jitted pure function, so
-the same machinery runs inside pjit'd serving steps (see models/kvcache).
+Since the fused-window refactor this class is a thin compatibility shim
+over `core/engine.py`: every op is ONE compiled dispatch (the collect +
+backend pass is fused into the op that closes a window — the host only
+keeps the deterministic op clock), and batched callers should skip the
+shim entirely and drive `Engine.run_window` / `serve_steps`, which run
+`collect_every` steps per dispatch. Both paths execute identical
+transitions (tests/test_engine.py asserts bit-parity).
+
+Note: `free` advances the window clock like every other op (the engine's
+scan needs a data-independent clock); the pre-engine frontend did not
+tick on free.
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import backend as be
-from repro.core import collector as col
+from repro.core import engine as eng
 from repro.core import object_table as ot
 from repro.core import page_util
-from repro.core import policy
 from repro.core import pool as pl
 
-
-@dataclasses.dataclass(frozen=True)
-class HadesOptions:
-    collect_every: int = 8
-    backend: be.BackendConfig = dataclasses.field(
-        default_factory=be.BackendConfig)
-    collector: col.CollectorConfig = dataclasses.field(
-        default_factory=col.CollectorConfig)
-    enabled: bool = True           # False = allocator-only (no tidying)
-    # Arm ATC tracking for the window preceding each collect. The paper's
-    # scope guards decrement on function EXIT; in a synchronous loop every
-    # step has exited before the collector runs, so nothing is in flight
-    # and arming would only veto migrations spuriously. Set True when the
-    # runtime overlaps step dispatch with collection (async serving) —
-    # then ATC>0 marks objects a concurrent step may still dereference.
-    overlap_collect: bool = False
+# back-compat alias: same fields, same defaults, now hashable engine config
+HadesOptions = eng.EngineOptions
 
 
 class Hades:
@@ -57,38 +47,43 @@ class Hades:
                  opts: Optional[HadesOptions] = None):
         self.cfg = pool_cfg
         self.opts = opts or HadesOptions()
-        self.state = pl.init(pool_cfg)
+        self.engine = eng.Engine(pool_cfg, self.opts)
+        self.state = self.engine.init()
         self._step = 0
         self.last_report: Dict[str, jax.Array] = {}
-        # jitted transitions (static config closed over)
-        self._alloc = jax.jit(functools.partial(pl.alloc, pool_cfg))
-        self._read = jax.jit(functools.partial(pl.read, pool_cfg))
-        self._write = jax.jit(functools.partial(pl.write, pool_cfg))
-        self._free = jax.jit(functools.partial(pl.free, pool_cfg))
-        self._collect = jax.jit(functools.partial(
-            col.collect, pool_cfg, self.opts.collector))
-        self._backend = jax.jit(functools.partial(
-            be.step, self.opts.backend, pool_cfg))
+
+    # -- window clock (host mirror of the device-side cadence) ---------------
+    def _flags(self):
+        if not self.opts.enabled:
+            return False, False
+        nxt = self._step + 1
+        every = self.opts.collect_every
+        do_arm = self.opts.overlap_collect and nxt % every == every - 1
+        do_collect = nxt % every == 0
+        return do_arm, do_collect
+
+    def _op(self, op: str, obj_ids, values=None):
+        do_arm, do_collect = self._flags()
+        self.state, out, report = self.engine.step(
+            self.state, op, obj_ids, values, do_arm=do_arm,
+            do_collect=do_collect)
+        self._step += 1
+        if do_collect:
+            self.last_report = report
+        return out
 
     # -- application-facing ops ---------------------------------------------
     def alloc(self, obj_ids, values):
-        self.state = self._alloc(self.state, jnp.asarray(obj_ids, jnp.int32),
-                                 values)
-        self._tick()
+        self._op("alloc", obj_ids, values)
 
     def read(self, obj_ids) -> jax.Array:
-        vals, self.state = self._read(self.state,
-                                      jnp.asarray(obj_ids, jnp.int32))
-        self._tick()
-        return vals
+        return self._op("read", obj_ids)
 
     def write(self, obj_ids, values):
-        self.state = self._write(self.state, jnp.asarray(obj_ids, jnp.int32),
-                                 values)
-        self._tick()
+        self._op("write", obj_ids, values)
 
     def free(self, obj_ids):
-        self.state = self._free(self.state, jnp.asarray(obj_ids, jnp.int32))
+        self._op("free", obj_ids)
 
     def end_load_phase(self):
         """Clear load-time access bits + window counters without
@@ -103,27 +98,9 @@ class Hades:
         self._step = 0
 
     # -- collector/backend loop ----------------------------------------------
-    def _tick(self):
-        self._step += 1
-        if not self.opts.enabled:
-            return
-        every = self.opts.collect_every
-        # epoch protocol: ATC instrumentation is live only during the
-        # armed step, and only when collection overlaps execution
-        if self.opts.overlap_collect and self._step % every == every - 1:
-            self.state = col.arm(self.state)
-        elif self._step % every == 0:
-            self.collect()
-
     def collect(self):
-        self.state, report = self._collect(self.state)
-        # backend sees the closing window's superblock stats (pre-clear)
-        stats = report.pop("sb_stats")
-        tier, evict = self._backend(stats, self.state["sb_tier"],
-                                    self.state["sb_evict"],
-                                    report["proactive_ok"])
-        self.state = dict(self.state, sb_tier=tier, sb_evict=evict)
-        self.last_report = report
+        """Force a collect+backend pass now (one dispatch)."""
+        self.state, self.last_report = self.engine.collect_now(self.state)
 
     # -- metrics ---------------------------------------------------------------
     def rss_bytes(self) -> int:

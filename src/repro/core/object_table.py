@@ -113,17 +113,22 @@ def record_access(table: jax.Array, obj_ids: jax.Array,
     the store when already set; XLA's scatter-or is likewise write-once).
     When a migration window is `armed`, also bump the saturating ATC —
     the scope-guard analog. Invalid ids (< 0) are dropped."""
+    n = table.shape[0]
     valid = obj_ids >= 0
-    ids = jnp.where(valid, obj_ids, 0)
-    upd = jnp.where(valid, ACCESS_MASK << ACCESS_SHIFT, 0).astype(jnp.uint32)
-    table = table.at[ids].set(table[ids] | upd, mode="drop",
-                              unique_indices=False)
+    safe = jnp.where(valid, obj_ids, 0)      # in-bounds gather index
+    dst = jnp.where(valid, obj_ids, n)       # invalid -> dropped scatter
+    # invalid ids must be DROPPED, not redirected to id 0 with a no-op
+    # update: a batch holding both a padding entry and a real access to
+    # object 0 would otherwise scatter conflicting words to index 0, and
+    # XLA leaves the winner among duplicate writes undefined.
+    word = table[safe] | (ACCESS_MASK << ACCESS_SHIFT)
+    table = table.at[dst].set(word, mode="drop", unique_indices=False)
     # saturating ATC increment (armed windows only)
     def bump(t):
-        w = t[ids]
+        w = t[safe]
         atc = atc_of(w)
         w2 = with_atc(w, jnp.minimum(atc + 1, ATC_SAT))
-        return t.at[ids].max(jnp.where(valid, w2, 0), mode="drop")
+        return t.at[dst].max(w2, mode="drop")
     armed_arr = jnp.asarray(armed)
     table = jax.lax.cond(armed_arr.astype(bool), bump, lambda t: t, table)
     return table

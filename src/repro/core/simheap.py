@@ -152,15 +152,31 @@ class SimHeap:
         self.win_track_ops += len(ids)
         self._touch_pages(self.addr[uniq], self.size[uniq], fault=True)
 
+    @staticmethod
+    def _page_ranges(addrs: np.ndarray, sizes: np.ndarray
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+        """Expand per-object [first, last] page spans into one flat page
+        array + the object index each entry came from. Ragged-range via
+        repeat/cumsum: O(total touched pages), independent of the max
+        object span (the old per-span Python loop was O(max span) full
+        passes over the batch)."""
+        first = addrs // PAGE
+        last = (addrs + np.maximum(sizes, 1) - 1) // PAGE
+        counts = (last - first + 1).astype(np.int64)
+        owner = np.repeat(np.arange(len(addrs)), counts)
+        # offset within each object's span: global arange minus each
+        # span's starting position, broadcast by repeat
+        starts = np.cumsum(counts) - counts
+        offs = np.arange(counts.sum(), dtype=np.int64) - np.repeat(starts,
+                                                                   counts)
+        return np.repeat(first, counts) + offs, owner
+
     def _touch_pages(self, addrs: np.ndarray, sizes: np.ndarray,
                      fault: bool) -> None:
         if len(addrs) == 0:
             return
-        first = addrs // PAGE
-        last = (addrs + np.maximum(sizes, 1) - 1) // PAGE
-        span = int((last - first).max()) + 1
-        pages = np.unique(np.concatenate(
-            [np.minimum(first + i, last) for i in range(span)]))
+        pages, _ = self._page_ranges(addrs, sizes)
+        pages = np.unique(pages)
         out = pages[self.evict[pages] == 2]
         self.win_faults += len(out)
         self.total_faults += len(out)
@@ -351,12 +367,8 @@ class SimHeap:
             return 1.0
         ids = np.nonzero(live)[0]
         ubytes = int(self.size[ids].sum())
-        first = self.addr[ids] // PAGE
-        last = (self.addr[ids] + np.maximum(self.size[ids], 1) - 1) // PAGE
-        span = int((last - first).max()) + 1
-        pages = np.unique(np.concatenate(
-            [np.minimum(first + i, last) for i in range(span)]))
-        return ubytes / (len(pages) * PAGE)
+        pages, _ = self._page_ranges(self.addr[ids], self.size[ids])
+        return ubytes / (len(np.unique(pages)) * PAGE)
 
     def per_page_utilization(self) -> np.ndarray:
         """Utilized fraction of every page touched this window (fig 2's
@@ -366,19 +378,13 @@ class SimHeap:
             return np.ones(1)
         ids = np.nonzero(live)[0]
         addr, size = self.addr[ids], self.size[ids]
-        acc = np.zeros(self.n_pages + 1, np.int64)
-        first = addr // PAGE
-        last = (addr + np.maximum(size, 1) - 1) // PAGE
-        span = int((last - first).max()) + 1
-        for i in range(span):
-            pg = first + i
-            sel = pg <= last
-            # bytes of this object on page pg
-            start = np.maximum(addr, pg * PAGE)
-            end = np.minimum(addr + size, (pg + 1) * PAGE)
-            np.add.at(acc, np.where(sel, pg, self.n_pages),
-                      np.where(sel, np.maximum(end - start, 0), 0))
-        touched = acc[:-1][acc[:-1] > 0]
+        acc = np.zeros(self.n_pages, np.int64)
+        pg, owner = self._page_ranges(addr, size)
+        # bytes of each owning object landing on each of its pages
+        start = np.maximum(addr[owner], pg * PAGE)
+        end = np.minimum(addr[owner] + size[owner], (pg + 1) * PAGE)
+        np.add.at(acc, pg, np.maximum(end - start, 0))
+        touched = acc[acc > 0]
         return np.minimum(touched / PAGE, 1.0)
 
     def rss_bytes(self) -> int:

@@ -32,7 +32,7 @@ _CIW_MASK = (1 << ot.CIW_BITS) - 1
 
 
 def _kernel(ct_ref, sbslots_ref, table_ref, new_table_ref, to_hot_ref,
-            to_cold_ref, hist_ref):
+            to_cold_ref, hist_ref, *, with_hist: bool):
     i = pl.program_id(0)
     w = table_ref[...]                       # [rows_tile, 128] uint32
     live = ((w >> ot.HEAP_SHIFT) & _HEAP_MASK) != ot.FREE
@@ -55,28 +55,33 @@ def _kernel(ct_ref, sbslots_ref, table_ref, new_table_ref, to_hot_ref,
     to_hot_ref[...] = to_hot.astype(jnp.int32)
     to_cold_ref[...] = to_cold.astype(jnp.int32)
 
-    # per-superblock hot histogram via one-hot contraction (MXU-friendly)
-    n_sbs = hist_ref.shape[-1]
-    sb = ((w >> ot.SLOT_SHIFT) & _SLOT_MASK) // sbslots_ref[0]
-    flat_sb = sb.reshape(-1).astype(jnp.int32)          # [tile]
-    flat_acc = acc.reshape(-1).astype(jnp.float32)      # [tile]
-    onehot = (flat_sb[:, None] ==
-              jax.lax.broadcasted_iota(jnp.int32, (flat_sb.shape[0], n_sbs),
-                                       1)).astype(jnp.float32)
-    contrib = jnp.dot(flat_acc[None, :], onehot,
-                      preferred_element_type=jnp.float32)  # [1, n_sbs]
-
     @pl.when(i == 0)
     def _init():
         hist_ref[...] = jnp.zeros_like(hist_ref)
-    hist_ref[...] += contrib.astype(jnp.int32)
+    if with_hist:
+        # per-superblock hot histogram via one-hot contraction
+        # (MXU-friendly); statically skipped when the caller discards it
+        # (the collector recomputes referenced bits post-migration)
+        n_sbs = hist_ref.shape[-1]
+        sb = ((w >> ot.SLOT_SHIFT) & _SLOT_MASK) // sbslots_ref[0]
+        flat_sb = sb.reshape(-1).astype(jnp.int32)          # [tile]
+        flat_acc = acc.reshape(-1).astype(jnp.float32)      # [tile]
+        onehot = (flat_sb[:, None] ==
+                  jax.lax.broadcasted_iota(jnp.int32,
+                                           (flat_sb.shape[0], n_sbs),
+                                           1)).astype(jnp.float32)
+        contrib = jnp.dot(flat_acc[None, :], onehot,
+                          preferred_element_type=jnp.float32)  # [1, n_sbs]
+        hist_ref[...] += contrib.astype(jnp.int32)
 
 
 def access_scan_pallas(table: jax.Array, ciw_threshold: jax.Array,
                        sb_slots: int, n_sbs: int, *, rows_tile: int = 64,
-                       interpret: bool = True):
+                       with_hist: bool = True, interpret: bool = True):
     """table: [N] uint32 (N % 128 == 0). Returns (new_table [N],
-    to_hot [N] int32, to_cold [N] int32, hist [n_sbs] int32)."""
+    to_hot [N] int32, to_cold [N] int32, hist [n_sbs] int32; hist is
+    all-zero when with_hist=False — the contraction is statically
+    skipped)."""
     n = table.shape[0]
     assert n % LANE == 0, f"table len {n} not lane-aligned"
     rows = n // LANE
@@ -99,7 +104,7 @@ def access_scan_pallas(table: jax.Array, ciw_threshold: jax.Array,
         ],
     )
     fn = pl.pallas_call(
-        _kernel,
+        functools.partial(_kernel, with_hist=with_hist),
         grid_spec=grid_spec,
         out_shape=[
             jax.ShapeDtypeStruct((rows, LANE), jnp.uint32),

@@ -7,11 +7,15 @@ runs ahead of the data DMAs (PrefetchScalarGridSpec), each grid step
 streams one [1, W_TILE] tile HBM->VMEM->HBM, and the pool array is
 aliased in/out so unmoved slots cost nothing.
 
-In-place safety contract (enforced by callers, asserted in ops.py):
-either (a) src and dst slot sets are disjoint (cross-heap migration:
-dst slots are free), or (b) moves are sorted so dst[i] <= src[i]
-(left-packing compaction) — grid steps run in ascending move order, so
-no move reads a slot a previous move overwrote.
+In-place safety contract (enforced by callers — ops.migrate routes
+masked-out moves to a scratch row to honor it): grid steps run in
+ascending move order and READ THE PRE-KERNEL VALUE of their source, so
+no move may read a slot a previous move overwrote. Sufficient
+conditions: (a) src and dst slot sets are disjoint (cross-heap
+migration: dst slots are free), or (b) moves are sorted so
+dst[i] <= src[i] (left-packing compaction). A self-move (src == dst)
+is NOT automatically safe: if its slot is an earlier move's
+destination, it rewrites stale bytes over the fresh copy.
 """
 from __future__ import annotations
 
@@ -35,8 +39,9 @@ def migrate_pallas(data: jax.Array, src: jax.Array, dst: jax.Array,
                    *, w_tile: int = 512, interpret: bool = True
                    ) -> jax.Array:
     """data: [n_slots, W] (W % 128 == 0), src/dst: [n_moves] int32.
-    Returns data with data[dst[i]] = data[src[i]] applied in move order.
-    Self-moves (src == dst) are no-ops (used to encode masked-out moves).
+    Returns data with data[dst[i]] = data[src[i]] applied in move order;
+    each move reads its source's PRE-kernel value (see the module
+    docstring for the aliasing contract).
     """
     n_slots, w = data.shape
     n_moves = src.shape[0]

@@ -36,32 +36,51 @@ def _pad_to(x: jax.Array, mult: int, axis: int) -> jax.Array:
     return jnp.pad(x, widths)
 
 
+def _tile(n: int, want: int) -> int:
+    """Largest divisor of n that is <= want (grid tiles must divide the
+    padded extent for any pool geometry)."""
+    t = min(want, n)
+    while n % t:
+        t -= 1
+    return t
+
+
 # ---------------------------------------------------------------------------
 # migrate
 # ---------------------------------------------------------------------------
 @functools.partial(jax.jit, static_argnames=("w_tile",))
 def migrate(data: jax.Array, src: jax.Array, dst: jax.Array,
             ok: jax.Array, *, w_tile: int = 512) -> jax.Array:
-    """data: [n_slots, W]; src/dst/ok: [n_moves]. Masked moves (ok=False)
-    become self-copies. Caller contract: disjoint src/dst sets OR
-    left-packing order (see migrate.py)."""
-    w = data.shape[1]
-    dst_eff = jnp.where(ok, dst, src).astype(jnp.int32)
-    padded = _pad_to(data, LANE, axis=1)
-    out = _mig.migrate_pallas(padded, src.astype(jnp.int32), dst_eff,
-                              w_tile=min(w_tile, padded.shape[1]),
+    """data: [n_slots, W]; src/dst/ok: [n_moves]. Caller contract for the
+    ACTIVE moves: disjoint src/dst sets OR left-packing order (see
+    migrate.py). Masked moves (ok=False) are routed to a scratch row
+    appended below the pool — NOT turned into self-copies, because a
+    masked entry's slot may be an earlier move's destination, and a grid
+    step reads the pre-kernel value (re-writing stale bytes over the
+    fresh copy)."""
+    n, w = data.shape
+    scratch = jnp.int32(n)
+    src_eff = jnp.where(ok, src, scratch).astype(jnp.int32)
+    dst_eff = jnp.where(ok, dst, scratch).astype(jnp.int32)
+    # one pad covers both the lane alignment and the scratch row (a
+    # second concatenate would copy the whole pool again)
+    padded = jnp.pad(data, ((0, 1), (0, (-w) % LANE)))
+    out = _mig.migrate_pallas(padded, src_eff, dst_eff,
+                              w_tile=_tile(padded.shape[1], w_tile),
                               interpret=_interpret())
-    return out[:, :w]
+    return out[:n, :w]
 
 
 # ---------------------------------------------------------------------------
 # access_scan
 # ---------------------------------------------------------------------------
-@functools.partial(jax.jit, static_argnames=("sb_slots", "n_sbs"))
+@functools.partial(jax.jit, static_argnames=("sb_slots", "n_sbs",
+                                             "with_hist"))
 def access_scan(table: jax.Array, ciw_threshold: jax.Array, *,
-                sb_slots: int, n_sbs: int):
+                sb_slots: int, n_sbs: int, with_hist: bool = True):
     """table: [N] uint32. Returns (new_table, to_hot bool, to_cold bool,
-    hist [n_sbs] int32)."""
+    hist [n_sbs] int32 — zeros when with_hist=False, which statically
+    skips the one-hot contraction for callers that discard it)."""
     n = table.shape[0]
     padded = _pad_to(table, LANE, axis=0)  # pad words are FREE=0b? pad=0
     # pad words decode as heap=NEW,slot=0,access=0 -> not live? heap 0 is
@@ -71,7 +90,9 @@ def access_scan(table: jax.Array, ciw_threshold: jax.Array, *,
         pad_word = ot.free_word()
         padded = padded.at[n:].set(pad_word)
     new_t, to_hot, to_cold, hist = _scan.access_scan_pallas(
-        padded, ciw_threshold, sb_slots, n_sbs, interpret=_interpret())
+        padded, ciw_threshold, sb_slots, n_sbs,
+        rows_tile=_tile(padded.shape[0] // LANE, 64),
+        with_hist=with_hist, interpret=_interpret())
     return (new_t[:n], to_hot[:n].astype(bool), to_cold[:n].astype(bool),
             hist)
 

@@ -25,7 +25,9 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import backend as be
 from repro.core import collector as col
+from repro.core import engine as eng
 from repro.core import object_table as ot
 from repro.core import pool as pl
 from repro.kernels import ops as kops
@@ -174,6 +176,17 @@ def collect(cfg: KVCacheConfig, state: Dict,
     pcfg = cfg.pool_config()
     pool, report = col.collect(pcfg, col_cfg or col.CollectorConfig(),
                                state["pool"])
+    return dict(state, pool=pool), report
+
+
+def collect_and_backend(cfg: KVCacheConfig, col_cfg: col.CollectorConfig,
+                        be_cfg: be.BackendConfig, state: Dict
+                        ) -> Tuple[Dict, Dict]:
+    """Collector + backend over the KV pool as ONE fused transition (the
+    engine's serving-window path) — replaces the old collect-dispatch /
+    stats-pop / backend-dispatch sequence in the server loop."""
+    pool, report = eng.collect_and_backend(cfg.pool_config(), col_cfg,
+                                           be_cfg, state["pool"])
     return dict(state, pool=pool), report
 
 

@@ -11,6 +11,7 @@ their lanes are refilled from the pending queue.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
@@ -53,6 +54,11 @@ class Server:
         self.state = kvc.init(self.kv_cfg)
         self._steps = 0
         self.reports: List[Dict] = []
+        # collector + backend as ONE compiled transition (engine path);
+        # RSS/host gauges come back inside the report — no extra syncs
+        self._collect_fused = jax.jit(functools.partial(
+            kvc.collect_and_backend, self.kv_cfg, self.col_cfg,
+            self.be_cfg))
 
     # -- one decode step across the batch -------------------------------------
     def decode_step(self, params, tokens: jax.Array
@@ -111,20 +117,9 @@ class Server:
         self._steps += 1
         every = self.cfg.collect_every
         if self._steps % every == 0:
-            self.state, report = kvc.collect(self.kv_cfg, self.state,
-                                             self.col_cfg)
-            pcfg = self.kv_cfg.pool_config()
-            stats = report.pop("sb_stats")    # closing window's view
-            tier, evict = be.step(self.be_cfg, pcfg, stats,
-                                  self.state["pool"]["sb_tier"],
-                                  self.state["pool"]["sb_evict"],
-                                  report["proactive_ok"])
-            self.state = dict(self.state, pool=dict(
-                self.state["pool"], sb_tier=tier, sb_evict=evict))
-            report["rss_bytes"] = float(pl.rss_bytes(pcfg,
-                                                     self.state["pool"]))
-            report["host_bytes"] = float(pl.host_bytes(pcfg,
-                                                       self.state["pool"]))
+            # one dispatch: collect + MIAD + candidate marking + backend,
+            # with the RSS/host gauges computed on-device (engine path)
+            self.state, report = self._collect_fused(self.state)
             self.reports.append({k: float(v) for k, v in report.items()})
         return logits, None
 

@@ -1,0 +1,200 @@
+"""Fused-window engine parity: `Engine.run_window` (one jitted scan per
+window) must produce BIT-identical pool state, read outputs, and collect
+reports vs. the step-by-step `Hades` loop — with both the jnp-oracle and
+the Pallas (interpret-mode) collector — plus the fused single-pass
+migration vs. the kernels' contracts."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import Hades, HadesOptions, make_config
+from repro.core import collector as col
+from repro.core import engine as eng
+from repro.core import object_table as ot
+from repro.core import pool as pl
+from repro.core.backend import BackendConfig
+
+CFG = make_config(max_objects=64, slot_words=8, sb_slots=8, page_slots=4,
+                  slack=2.0)
+
+
+def _opts(use_pallas=False, overlap=False, backend="proactive", every=4):
+    return HadesOptions(
+        collect_every=every, backend=BackendConfig(kind=backend),
+        collector=col.CollectorConfig(use_pallas=use_pallas),
+        overlap_collect=overlap)
+
+
+def _mixed_steps(rng, n_steps=15, n_objs=48):
+    """alloc + a random interleaving of read/write/free/alloc batches."""
+    vals = np.arange(n_objs * CFG.slot_words,
+                     dtype=np.float32).reshape(n_objs, CFG.slot_words)
+    steps = [("alloc", np.arange(n_objs), vals)]
+    for t in range(n_steps):
+        kind = rng.choice(["read", "read", "read", "write", "free",
+                           "alloc"])
+        pick = rng.integers(0, n_objs, size=6)
+        if kind in ("write", "alloc"):
+            steps.append((kind, pick,
+                          rng.normal(size=(6, CFG.slot_words)).astype(
+                              np.float32)))
+        else:
+            steps.append((kind, pick, None))
+    return steps
+
+
+def _drive_hades(opts, steps):
+    h = Hades(CFG, opts)
+    outs = []
+    for op, ids, values in steps:
+        if op == "read":
+            outs.append(np.asarray(h.read(ids)))
+        elif op == "write":
+            h.write(ids, values)
+        elif op == "alloc":
+            h.alloc(ids, values)
+        elif op == "free":
+            h.free(ids)
+    return h, outs
+
+
+def _assert_state_equal(a, b):
+    for k in a:
+        assert np.array_equal(np.asarray(a[k]), np.asarray(b[k])), \
+            f"state[{k}] diverged"
+
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+@pytest.mark.parametrize("overlap", [False, True])
+def test_run_window_matches_hades_loop(use_pallas, overlap):
+    """One fused dispatch == N per-op dispatches, bit for bit (table,
+    heap data, tiers, counters, reports), jnp and Pallas collectors."""
+    rng = np.random.default_rng(0)
+    steps = _mixed_steps(rng)
+    opts = _opts(use_pallas=use_pallas, overlap=overlap)
+
+    h, per_op_reads = _drive_hades(opts, steps)
+
+    e = eng.Engine(CFG, opts)
+    trace = eng.make_trace(CFG, steps)
+    state, outs, reports = e.run_window(e.init(), trace, 0)
+
+    _assert_state_equal(h.state, state)
+    # read outputs: fused trace pads ids to k with -1 -> zeros rows
+    outs = np.asarray(outs)
+    ridx = [i for i, (op, _, _) in enumerate(steps) if op == "read"]
+    for got, i in zip(per_op_reads, ridx):
+        assert np.array_equal(got, outs[i, :got.shape[0]])
+    # reports at the collect steps match the per-op path's last_report
+    reps = eng.window_reports(reports)
+    assert len(reps) == len(steps) // opts.collect_every
+    for k, v in h.last_report.items():
+        assert float(v) == reps[-1][k], k
+
+
+def test_pallas_and_jnp_collectors_bit_identical():
+    """The use_pallas collector (access_scan + migrate kernels, interpret
+    mode) is bit-identical to the jnp oracle over a mixed trace."""
+    rng = np.random.default_rng(1)
+    steps = _mixed_steps(rng, n_steps=20)
+    trace = eng.make_trace(CFG, steps)
+
+    e_j = eng.Engine(CFG, _opts(use_pallas=False))
+    e_p = eng.Engine(CFG, _opts(use_pallas=True))
+    s_j, o_j, r_j = e_j.run_window(e_j.init(), trace, 0)
+    s_p, o_p, r_p = e_p.run_window(e_p.init(), trace, 0)
+    _assert_state_equal(s_j, s_p)
+    assert np.array_equal(np.asarray(o_j), np.asarray(o_p))
+    for k in r_j:
+        assert np.array_equal(np.asarray(r_j[k]), np.asarray(r_p[k])), k
+
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_fused_migration_matches_sequential_passes(use_pallas):
+    """The single fused data movement must equal the old two-pass
+    sequential migration: hot movers land densely in HOT, cold movers may
+    claim slots hot movers vacated, payloads survive."""
+    state = pl.init(CFG)
+    n = 48
+    vals = jnp.arange(n * CFG.slot_words,
+                      dtype=jnp.float32).reshape(n, CFG.slot_words)
+    state = pl.alloc(CFG, state, jnp.arange(n, dtype=jnp.int32), vals)
+    ccfg = col.CollectorConfig(use_pallas=use_pallas)
+    # several windows: reads promote a subset hot, the idle rest cools
+    for w in range(6):
+        _, state = pl.read(CFG, state, jnp.arange(0, 12, dtype=jnp.int32))
+        state, rep = col.collect(CFG, ccfg, state)
+    # classification outcome
+    heaps = np.asarray(ot.heap_of(state["table"][:n]))
+    assert (heaps[:12] == ot.HOT).all()
+    assert (heaps[12:] == ot.COLD).all()
+    # payload integrity after all moves
+    got, state = pl.read(CFG, state, jnp.arange(n, dtype=jnp.int32))
+    assert np.array_equal(np.asarray(got), np.asarray(vals))
+    # HOT landing is dense from the region start
+    lo, hi = CFG.region(ot.HOT)
+    owner = np.asarray(state["slot_owner"][lo:hi])
+    nz = np.nonzero(owner >= 0)[0]
+    assert nz.max() == len(nz) - 1
+
+
+def test_every_one_overlap_aligned_matches_generic():
+    """Degenerate cadence (collect_every=1, overlap on): the cond-free
+    aligned shape must still agree bit-for-bit with the generic shape
+    (arm fires after the op on both)."""
+    rng = np.random.default_rng(3)
+    steps = _mixed_steps(rng, n_steps=7)
+    trace = eng.make_trace(CFG, steps)
+    opts = _opts(overlap=True, every=1)
+    e = eng.Engine(CFG, opts)
+    s_a, o_a, r_a = e.run_window(e.init(), trace, 0)        # aligned
+    s_g, o_g, r_g = e.run_window(e.init(), trace,
+                                 jnp.int32(0))              # generic
+    _assert_state_equal(s_a, s_g)
+    assert np.array_equal(np.asarray(o_a), np.asarray(o_g))
+    for k in r_a:
+        assert np.array_equal(np.asarray(r_a[k]), np.asarray(r_g[k])), k
+    h, _ = _drive_hades(opts, steps)
+    _assert_state_equal(h.state, s_a)
+
+
+def test_serve_steps_streams_windows():
+    """Chunked streaming (`serve_steps`) equals the one-shot scan and
+    surfaces one report per closed window."""
+    rng = np.random.default_rng(2)
+    steps = _mixed_steps(rng, n_steps=15)
+    trace = eng.make_trace(CFG, steps)
+    opts = _opts()
+    e = eng.Engine(CFG, opts)
+    s1, o1, r1 = e.run_window(e.init(), trace, 0)
+    s2, o2, reps = e.serve_steps(e.init(), trace)
+    _assert_state_equal(s1, s2)
+    assert np.array_equal(np.asarray(o1), np.asarray(o2))
+    assert len(reps) == len(steps) // opts.collect_every
+    assert all(r["did_collect"] for r in reps)
+
+
+def test_free_advances_window_clock():
+    """Engine contract: every trace op ticks the clock, including free —
+    a window of `collect_every` ops always closes with a collect."""
+    opts = _opts(every=4)
+    e = eng.Engine(CFG, opts)
+    vals = np.ones((8, CFG.slot_words), np.float32)
+    steps = [("alloc", np.arange(8), vals), ("read", np.arange(8), None),
+             ("free", np.arange(4), None), ("read", np.arange(4, 8), None)]
+    _, _, reports = e.run_window(e.init(), eng.make_trace(CFG, steps), 0)
+    assert np.asarray(reports["did_collect"]).tolist() == [
+        False, False, False, True]
+
+
+def test_record_access_padding_vs_object_zero():
+    """Regression: a batch mixing padding (-1) with a genuine access to
+    object 0 must still set object 0's access bit (invalid ids are
+    dropped, not redirected to index 0 with a conflicting no-op write)."""
+    tbl = ot.make_table(8)
+    tbl = tbl.at[0].set(ot.pack(3, ot.NEW))
+    got = ot.record_access(tbl, jnp.asarray([-1, 0, -1, -1], jnp.int32))
+    assert int(ot.access_of(got[0])) == 1
+    # and padding never dirties any other word
+    assert np.array_equal(np.asarray(got[1:]), np.asarray(tbl[1:]))

@@ -1,6 +1,8 @@
 """MIAD policy (invariant 5) + backend behaviour/obliviousness."""
 import jax.numpy as jnp
 import numpy as np
+import pytest
+pytest.importorskip("hypothesis")  # optional dev dep (requirements-dev.txt)
 from hypothesis import given, settings
 from hypothesis import strategies as st
 

@@ -3,6 +3,7 @@ evaluation substrate): under ANY interleaving of alloc/access/free/
 collect/backend ops, the address space stays consistent."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # optional dev dep (requirements-dev.txt)
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
