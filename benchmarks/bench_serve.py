@@ -1,0 +1,125 @@
+"""Serving decode-window benchmark: per-step vs scanned-window vs
+double-buffered overlapped decode on the HADES paged-KV server. Emits
+`BENCH_serve.json` via benchmarks.common.emit_json — the perf trajectory
+artifact the acceptance gate reads (windowed decode must issue <= 2 host
+dispatches per W-token window, vs W per-step, and >= 2x tokens/sec on
+CPU at W=16).
+
+    PYTHONPATH=src:. python benchmarks/bench_serve.py [--smoke]
+
+All three variants run the IDENTICAL fused model transition (embed ->
+per-layer qkv/paged-attend/ffn -> logits -> sample -> collect cadence);
+the per-step path pays one host dispatch per token, the windowed path
+one per W tokens (`Server.decode_window`, a single jitted lax.scan), and
+the overlapped path additionally defers each window's report sync until
+the next window's dispatch is in flight (the ATC/arm epoch protocol
+keeps migration safe while steps are conceptually in flight).
+
+Dispatch accounting is host-side and exact (`Server.dispatches`).
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit_json
+from repro.models.model import build
+from repro.runtime.server import Server, ServerConfig
+
+
+def _run_per_step(srv, params, toks):
+    done = None
+    for t in range(toks.shape[1]):
+        logits, _ = srv.decode_step(params, toks[:, t])
+        # the host round trip a per-token loop cannot avoid: the
+        # scheduler inspects the sampled token every step (EOS, lane
+        # refill) before it can issue the next one — exactly the sync
+        # the scanned window amortizes to once per W tokens
+        done = bool((np.asarray(srv._last_tok)
+                     == srv.cfg.eos_token).all())
+    jax.block_until_ready(logits)
+    return done
+
+
+def _run_windowed(srv, params, toks):
+    # the production entry point: teacher-force every token through
+    # `generate` (max_new=1 -> total steps == n_tokens), which chunks
+    # into W-step decode_window dispatches and — with overlap_collect —
+    # runs the double-buffered report-sync loop itself
+    out = srv.generate(params, toks, max_new=1)
+    jax.block_until_ready(out)
+
+
+def _best_of(fn, repeats: int) -> float:
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def main(smoke: bool = False):
+    w = 16
+    n_tokens = 2 * w if smoke else 6 * w
+    # container timers are noisy and the per-step variant syncs every
+    # token (hypersensitive to scheduler jitter): best-of over enough
+    # repeats that each variant sees a quiet window
+    repeats = 2 if smoke else 6
+    # small-batch decode: the latency-critical serving regime, where the
+    # per-token host dispatch + sync overhead the windowed scan removes
+    # is the dominant cost (large batches amortize it on compute)
+    batch = 2
+    m = build("chatglm3-6b", reduced=True)
+    params = m.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    # the pool is sized to the run (Server.reset between repeats reuses
+    # the compiled programs) — an oversized max_len would inflate every
+    # step's pool traffic and hide the dispatch-overhead story
+    kw = dict(batch=batch, max_len=n_tokens + w, block_tokens=w,
+              collect_every=w, window=w)
+    toks = jnp.asarray(rng.integers(0, m.cfg.vocab_size,
+                                    (batch, n_tokens)), jnp.int32)
+
+    record = {"arch": "chatglm3-6b-reduced", "smoke": smoke,
+              "batch": batch, "window": w, "n_tokens": n_tokens,
+              "collect_every": w}
+    variants = [
+        ("per_step", False, _run_per_step, ()),
+        ("windowed", False, _run_windowed, ()),
+        ("overlapped", True, _run_windowed, ()),
+    ]
+    for tag, overlap, fn, extra in variants:
+        srv = Server(m, ServerConfig(overlap_collect=overlap, **kw))
+        fn(srv, params, toks, *extra)          # warmup (compile)
+        n_disp = None
+        secs = float("inf")
+        for _ in range(repeats):
+            srv.reset()
+            t0 = time.perf_counter()
+            fn(srv, params, toks, *extra)
+            secs = min(secs, time.perf_counter() - t0)
+            n_disp = srv.dispatches
+        toks_total = batch * n_tokens
+        record[f"{tag}_tokens_per_sec"] = toks_total / secs
+        record[f"{tag}_dispatches_per_token"] = n_disp / n_tokens
+        record[f"{tag}_dispatches_per_window"] = n_disp / (n_tokens / w)
+    record["windowed_speedup"] = (record["windowed_tokens_per_sec"]
+                                  / record["per_step_tokens_per_sec"])
+    record["overlapped_speedup"] = (record["overlapped_tokens_per_sec"]
+                                    / record["per_step_tokens_per_sec"])
+    # smoke runs (CI) go to scratch so they never clobber the committed
+    # full-run perf-trajectory artifact
+    out_dir = "bench_out" if smoke else "."
+    os.makedirs(out_dir, exist_ok=True)
+    emit_json("serve", record, out_dir=out_dir)
+    return record
+
+
+if __name__ == "__main__":
+    main(smoke="--smoke" in sys.argv)

@@ -57,23 +57,27 @@ class CollectorConfig:
 
 
 def classify(pool_cfg: pl.PoolConfig, col_cfg: CollectorConfig,
-             state: Dict) -> Tuple[jax.Array, jax.Array, jax.Array]:
-    """One sweep over the table: update CIW lanes and emit migration masks
-    (Fig. 5 state machine, ATC lock-free rule folded in). Returns
-    (table_with_new_ciw, to_hot, to_cold)."""
+             state: Dict) -> Tuple[jax.Array, jax.Array, jax.Array,
+                                   jax.Array]:
+    """One sweep over the table: update CIW lanes, emit migration masks
+    (Fig. 5 state machine, ATC lock-free rule folded in) and count the
+    ATC-vetoed objects. Returns (table_with_new_ciw, to_hot, to_cold,
+    skipped_atc) — the full classification comes from ONE table sweep on
+    both paths (the Pallas kernel emits skipped_atc itself, so no table
+    field is re-read in jnp)."""
     tbl = state["table"]
     if col_cfg.use_pallas:
         from repro.kernels import ops as kops
         # with_hist=False: referenced bits must be recomputed from the
         # POST-migration layout anyway (superblock_stats), so the
         # kernel's pre-move histogram would be dead work
-        new_tbl, to_hot, to_cold, _ = kops.access_scan(
+        new_tbl, to_hot, to_cold, _, skipped = kops.access_scan(
             tbl, state["ciw_threshold"], sb_slots=pool_cfg.sb_slots,
             n_sbs=pool_cfg.n_sbs, with_hist=False)
         if not col_cfg.promote_new_on_access:
             # kernel bakes in NEW-promotes-on-access; mask it back out
             to_hot &= ot.heap_of(tbl) != ot.NEW
-        return new_tbl, to_hot, to_cold
+        return new_tbl, to_hot, to_cold, skipped
 
     live = ot.is_live(tbl)
     acc = (ot.access_of(tbl) == 1) & live
@@ -93,10 +97,13 @@ def classify(pool_cfg: pl.PoolConfig, col_cfg: CollectorConfig,
     movable = live & (atc == 0)          # the lock-free rule
     to_hot &= movable
     to_cold &= movable
+    skipped = jnp.sum(live & (atc > 0) &
+                      (acc | ((ciw > ct) & (heap != ot.COLD)))
+                      ).astype(jnp.int32)
 
     new_tbl = (tbl & ~(ot.CIW_MASK << ot.CIW_SHIFT)) | \
         (ciw.astype(jnp.uint32) << ot.CIW_SHIFT)
-    return new_tbl, to_hot, to_cold
+    return new_tbl, to_hot, to_cold, skipped
 
 
 def _plan_moves(cfg: pl.PoolConfig, owner: jax.Array, table: jax.Array,
@@ -155,12 +162,18 @@ def migrate(cfg: pl.PoolConfig, state: Dict, to_hot: jax.Array,
     src = jnp.concatenate([src_h, src_c])
     dst = jnp.concatenate([dst_h, dst_c])
     ok = jnp.concatenate([ok_h, ok_c])
+    # masked moves route BOTH ends to the pool's permanent scratch row
+    # (index n_slots, all-zero at rest): the kernel copies the scratch row
+    # onto itself and the jnp oracle scatters zeros onto it, so the row
+    # stays zero and both paths remain bit-identical with no per-pass pad
+    # copy of the pool
     if use_pallas:
         from repro.kernels import ops as kops
-        data = kops.migrate(state["data"], src, dst, ok)
+        data = kops.migrate(state["data"], src, dst, ok,
+                            has_scratch_row=True)
     else:
         data = state["data"].at[jnp.where(ok, dst, cfg.n_slots)].set(
-            state["data"][src], mode="drop")
+            state["data"][jnp.where(ok, src, cfg.n_slots)], mode="drop")
     state = dict(state, data=data, slot_owner=owner, table=tbl)
     return state, jnp.sum(ok_h), jnp.sum(ok_c)
 
@@ -168,23 +181,15 @@ def migrate(cfg: pl.PoolConfig, state: Dict, to_hot: jax.Array,
 def collect(pool_cfg: pl.PoolConfig, col_cfg: CollectorConfig,
             state: Dict) -> Tuple[Dict, Dict[str, jax.Array]]:
     """One Object Collector pass. Returns (state, report)."""
-    tbl = state["table"]
-    live = ot.is_live(tbl)
-    acc = (ot.access_of(tbl) == 1) & live
-    atc = ot.atc_of(tbl)
-    heap = ot.heap_of(tbl)
-    ct = jnp.floor(state["ciw_threshold"]).astype(jnp.uint32)
-
-    # one table sweep: CIW update + migration masks
-    new_tbl, to_hot, to_cold = classify(pool_cfg, col_cfg, state)
+    # one table sweep: CIW update + migration masks + ATC-veto diagnostic
+    # (the access_scan kernel emits all four on the use_pallas path)
+    new_tbl, to_hot, to_cold, skipped_atc = classify(pool_cfg, col_cfg,
+                                                     state)
     state = dict(state, table=new_tbl)
 
     # fused two-direction migration, one data movement
     state, n_hot, n_cold = migrate(pool_cfg, state, to_hot, to_cold,
                                    use_pallas=col_cfg.use_pallas)
-    ciw = ot.ciw_of(new_tbl)
-    skipped_atc = jnp.sum(live & (atc > 0) &
-                          (acc | ((ciw > ct) & (heap != ot.COLD))))
 
     # --- MIAD on the window's promotion rate ---
     new_ct, calm, rate, proactive_ok = policy.update(
@@ -241,7 +246,10 @@ def compact_heap(pool_cfg: pl.PoolConfig, state: Dict, heap: int) -> Dict:
     src = jnp.arange(lo, hi, dtype=jnp.int32)
     dst = jnp.where(live, new_rel + lo, pool_cfg.n_slots)
 
-    data = state["data"].at[dst].set(state["data"][src], mode="drop")
+    # dead entries target the scratch row; copy the (all-zero) scratch row
+    # onto itself so its invariant survives the scatter
+    data = state["data"].at[dst].set(
+        state["data"][jnp.where(live, src, pool_cfg.n_slots)], mode="drop")
     new_seg_owner = jnp.full_like(seg, -1).at[
         jnp.where(live, new_rel, hi - lo)].set(seg, mode="drop")
     owner = owner.at[src - lo + lo].set(new_seg_owner)  # in-region overwrite

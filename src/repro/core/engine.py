@@ -139,6 +139,98 @@ def apply_step(pool_cfg: pl.PoolConfig, col_cfg: col.CollectorConfig,
 
 
 # ---------------------------------------------------------------------------
+# the window protocol over an ARBITRARY per-step transition
+# ---------------------------------------------------------------------------
+def window_program(step_fn, collect_fn, arm_fn, *, every: int,
+                   enabled: bool = True, overlap: bool = False,
+                   zero_report_fn=zero_report):
+    """Build the two fused-window program shapes over an arbitrary
+    per-step transition — the machinery behind `make_run_window`, reused
+    by the server's scanned decode windows (runtime/server.py):
+
+        step_fn(state, xs)  -> (state, out_pytree)     one window step
+        collect_fn(state)   -> (state, report)         fused collect+backend
+        arm_fn(state)       -> state                   ATC arming (epoch)
+
+    Returns (run_generic(state, xs, step0), run_aligned(state, xs)), both
+    UNJITTED so callers can close extra operands (e.g. model params) over
+    `step_fn` and jit at their own boundary. Window semantics are the
+    engine contract: the clock ticks once per step; arm fires after the
+    step at clock % every == every-1 (overlap only); collect+backend runs
+    after the step at clock % every == 0. `run_aligned` requires
+    T % every == 0 and step0 % every == 0 and is cond-free (one collect
+    per window, statically placed); `run_generic` handles any T/step0
+    with a cond-gated collect. Reports come back per-STEP in both shapes
+    (zeros off window closers; `did_collect` marks real ones)."""
+    every = int(every)
+
+    # -- generic shape: per-step cond ---------------------------------------
+    def step_body(carry, xs):
+        state, step = carry
+        state, out = step_fn(state, xs)
+        step = step + 1
+        if enabled:
+            if overlap:
+                state = jax.lax.cond(step % every == every - 1,
+                                     arm_fn, lambda s: s, state)
+            state, report = jax.lax.cond(
+                step % every == 0, collect_fn,
+                lambda s: (s, zero_report_fn()), state)
+        else:
+            report = zero_report_fn()
+        return (state, step), {"out": out, "report": report}
+
+    def run_generic(state, xs, step0):
+        step0 = jnp.asarray(step0, jnp.int32)
+        (state, _), ys = jax.lax.scan(step_body, (state, step0), xs)
+        return state, ys["out"], ys["report"]
+
+    # -- window-aligned shape: cond-free ------------------------------------
+    def window_body(state, wxs):
+        if every > 1:
+            head = jax.tree.map(lambda v: v[:every - 1], wxs)
+            state, outs = jax.lax.scan(step_fn, state, head)
+            # arm fires AFTER step every-1 (the generic path's
+            # step % every == every-1 check runs post-step)
+            if enabled and overlap:
+                state = arm_fn(state)
+        last = jax.tree.map(lambda v: v[every - 1], wxs)
+        state, out_last = step_fn(state, last)
+        if every == 1 and enabled and overlap:
+            # degenerate cadence: every step is both the arming and the
+            # closing step, and the generic path arms post-step
+            state = arm_fn(state)
+        if enabled:
+            state, report = collect_fn(state)
+        else:
+            report = zero_report_fn()
+        if every > 1:
+            outs = jax.tree.map(
+                lambda a, b: jnp.concatenate([a, b[None]], axis=0),
+                outs, out_last)
+        else:
+            outs = jax.tree.map(lambda b: b[None], out_last)
+        return state, {"out": outs, "report": report}
+
+    def run_aligned(state, xs):
+        t = jax.tree.leaves(xs)[0].shape[0]
+        wxs = jax.tree.map(
+            lambda v: v.reshape((t // every, every) + v.shape[1:]), xs)
+        state, ys = jax.lax.scan(window_body, state, wxs)
+        outs = jax.tree.map(lambda v: v.reshape((t,) + v.shape[2:]),
+                            ys["out"])
+        # scatter the per-window reports into the per-step layout the
+        # generic shape produces (zeros except at window closers)
+        reports = jax.tree.map(
+            lambda z, w: jnp.broadcast_to(
+                z, (t,) + z.shape).at[every - 1::every].set(w),
+            zero_report_fn(), ys["report"])
+        return state, outs, reports
+
+    return run_generic, run_aligned
+
+
+# ---------------------------------------------------------------------------
 # fused window — the whole access->collect->backend loop in one dispatch
 # ---------------------------------------------------------------------------
 def _op_step(pool_cfg: pl.PoolConfig, state: Dict, xs: Dict
@@ -186,64 +278,9 @@ def make_run_window(pool_cfg: pl.PoolConfig, opts: EngineOptions):
     col_cfg, be_cfg = opts.collector, opts.backend
     every = int(opts.collect_every)
     cab = functools.partial(collect_and_backend, pool_cfg, col_cfg, be_cfg)
-
-    # -- generic shape: per-step cond ---------------------------------------
-    def step_fn(carry, xs):
-        state, step = carry
-        state, out = _op_step(pool_cfg, state, xs)
-        step = step + 1
-        if opts.enabled:
-            if opts.overlap_collect:
-                state = jax.lax.cond(step % every == every - 1,
-                                     col.arm, lambda s: s, state)
-            state, report = jax.lax.cond(
-                step % every == 0, cab, lambda s: (s, zero_report()), state)
-        else:
-            report = zero_report()
-        return (state, step), {"out": out, "report": report}
-
-    def run_generic(state, trace, step0):
-        step0 = jnp.asarray(step0, jnp.int32)
-        (state, _), ys = jax.lax.scan(step_fn, (state, step0), trace)
-        return state, ys["out"], ys["report"]
-
-    # -- window-aligned shape: cond-free ------------------------------------
-    def window_body(state, wtrace):
-        if every > 1:
-            head = jax.tree.map(lambda v: v[:every - 1], wtrace)
-            state, outs = jax.lax.scan(
-                functools.partial(_op_step, pool_cfg), state, head)
-            # arm fires AFTER op every-1 (the generic path's
-            # step % every == every-1 check runs post-op)
-            if opts.enabled and opts.overlap_collect:
-                state = col.arm(state)
-        last = jax.tree.map(lambda v: v[every - 1], wtrace)
-        state, out_last = _op_step(pool_cfg, state, last)
-        if every == 1 and opts.enabled and opts.overlap_collect:
-            # degenerate cadence: every step is both the arming and the
-            # closing step, and the generic path arms post-op
-            state = col.arm(state)
-        if opts.enabled:
-            state, report = cab(state)
-        else:
-            report = zero_report()
-        outs = (jnp.concatenate([outs, out_last[None]], axis=0)
-                if every > 1 else out_last[None])
-        return state, {"out": outs, "report": report}
-
-    def run_aligned(state, trace):
-        t = trace["op"].shape[0]
-        wtrace = jax.tree.map(
-            lambda v: v.reshape((t // every, every) + v.shape[1:]), trace)
-        state, ys = jax.lax.scan(window_body, state, wtrace)
-        outs = ys["out"].reshape((t,) + ys["out"].shape[2:])
-        # scatter the per-window reports into the per-step layout the
-        # generic shape produces (zeros except at window closers)
-        reports = jax.tree.map(
-            lambda z, w: jnp.broadcast_to(
-                z, (t,) + z.shape).at[every - 1::every].set(w),
-            zero_report(), ys["report"])
-        return state, outs, reports
+    run_generic, run_aligned = window_program(
+        functools.partial(_op_step, pool_cfg), cab, col.arm,
+        every=every, enabled=opts.enabled, overlap=opts.overlap_collect)
 
     jit_generic = jax.jit(run_generic)
     jit_aligned = jax.jit(run_aligned)

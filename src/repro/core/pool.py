@@ -110,9 +110,18 @@ def make_config(max_objects: int, slot_words: int, *, sb_slots: int = 64,
 
 
 def init(cfg: PoolConfig) -> Dict[str, jax.Array]:
-    """Fresh pool state (a pytree dict — shardable, checkpointable)."""
+    """Fresh pool state (a pytree dict — shardable, checkpointable).
+
+    The data array carries ONE extra row (index `n_slots`) — a permanent
+    scratch row for the migrate kernel's masked moves, so the collector
+    never pays a whole-pool pad copy to append one per pass. Invariant:
+    the scratch row is all-zero at rest. Every masked/dead scatter that
+    targets index `n_slots` must therefore write zeros (or copy the
+    scratch row onto itself), keeping the jnp oracle and the Pallas mover
+    bit-identical including the scratch bytes."""
     return {
-        "data": jnp.zeros((cfg.n_slots, cfg.slot_words), jnp.dtype(cfg.dtype)),
+        "data": jnp.zeros((cfg.n_slots + 1, cfg.slot_words),
+                          jnp.dtype(cfg.dtype)),
         "table": ot.make_table(cfg.max_objects),
         "slot_owner": jnp.full((cfg.n_slots,), -1, jnp.int32),
         "sb_tier": jnp.zeros((cfg.n_sbs,), jnp.int8),
@@ -266,8 +275,11 @@ def write(cfg: PoolConfig, state: Dict, obj_ids: jax.Array,
     words = state["table"][ids]
     live = ot.is_live(words) & valid
     slots = ot.slot_of(words).astype(jnp.int32)
+    # dead/padding entries are routed to the scratch row (index n_slots)
+    # and must write ZEROS to preserve its all-zero invariant
     data = state["data"].at[jnp.where(live, slots, cfg.n_slots)].set(
-        values.astype(state["data"].dtype), mode="drop")
+        jnp.where(live[:, None], values.astype(state["data"].dtype), 0),
+        mode="drop")
     tbl = ot.record_access(state["table"], jnp.where(live, obj_ids, -1),
                            armed=state["armed"])
     promos = jnp.sum(live & (ot.heap_of(words) == ot.COLD)).astype(jnp.int32)

@@ -32,7 +32,7 @@ _CIW_MASK = (1 << ot.CIW_BITS) - 1
 
 
 def _kernel(ct_ref, sbslots_ref, table_ref, new_table_ref, to_hot_ref,
-            to_cold_ref, hist_ref, *, with_hist: bool):
+            to_cold_ref, hist_ref, skipped_ref, *, with_hist: bool):
     i = pl.program_id(0)
     w = table_ref[...]                       # [rows_tile, 128] uint32
     live = ((w >> ot.HEAP_SHIFT) & _HEAP_MASK) != ot.FREE
@@ -58,6 +58,16 @@ def _kernel(ct_ref, sbslots_ref, table_ref, new_table_ref, to_hot_ref,
     @pl.when(i == 0)
     def _init():
         hist_ref[...] = jnp.zeros_like(hist_ref)
+        skipped_ref[...] = jnp.zeros_like(skipped_ref)
+
+    # ATC-vetoed diagnostic, accumulated across tiles: objects the Fig. 5
+    # machine wanted to act on (accessed, or idle past the threshold and
+    # not already COLD) that the lock-free rule skipped this pass. Folded
+    # into the sweep so the collector never re-reads table fields in jnp.
+    skipped = live & (atc > 0) & \
+        (acc | ((ciw > ct) & (heap != ot.COLD)))
+    skipped_ref[...] += jnp.sum(skipped.astype(jnp.int32)).reshape(1, 1)
+
     if with_hist:
         # per-superblock hot histogram via one-hot contraction
         # (MXU-friendly); statically skipped when the caller discards it
@@ -79,9 +89,9 @@ def access_scan_pallas(table: jax.Array, ciw_threshold: jax.Array,
                        sb_slots: int, n_sbs: int, *, rows_tile: int = 64,
                        with_hist: bool = True, interpret: bool = True):
     """table: [N] uint32 (N % 128 == 0). Returns (new_table [N],
-    to_hot [N] int32, to_cold [N] int32, hist [n_sbs] int32; hist is
-    all-zero when with_hist=False — the contraction is statically
-    skipped)."""
+    to_hot [N] int32, to_cold [N] int32, hist [n_sbs] int32,
+    skipped_atc [] int32; hist is all-zero when with_hist=False — the
+    contraction is statically skipped)."""
     n = table.shape[0]
     assert n % LANE == 0, f"table len {n} not lane-aligned"
     rows = n // LANE
@@ -101,6 +111,7 @@ def access_scan_pallas(table: jax.Array, ciw_threshold: jax.Array,
             pl.BlockSpec((rows_tile, LANE), lambda i, ct, sbs: (i, 0)),
             pl.BlockSpec((rows_tile, LANE), lambda i, ct, sbs: (i, 0)),
             pl.BlockSpec((1, n_sbs), lambda i, ct, sbs: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i, ct, sbs: (0, 0)),
         ],
     )
     fn = pl.pallas_call(
@@ -111,9 +122,10 @@ def access_scan_pallas(table: jax.Array, ciw_threshold: jax.Array,
             jax.ShapeDtypeStruct((rows, LANE), jnp.int32),
             jax.ShapeDtypeStruct((rows, LANE), jnp.int32),
             jax.ShapeDtypeStruct((1, n_sbs), jnp.int32),
+            jax.ShapeDtypeStruct((1, 1), jnp.int32),
         ],
         interpret=interpret,
     )
-    new_t, to_hot, to_cold, hist = fn(ct, sbs, t2)
+    new_t, to_hot, to_cold, hist, skipped = fn(ct, sbs, t2)
     return (new_t.reshape(n), to_hot.reshape(n), to_cold.reshape(n),
-            hist[0])
+            hist[0], skipped[0, 0])

@@ -48,23 +48,35 @@ def _tile(n: int, want: int) -> int:
 # ---------------------------------------------------------------------------
 # migrate
 # ---------------------------------------------------------------------------
-@functools.partial(jax.jit, static_argnames=("w_tile",))
+@functools.partial(jax.jit, static_argnames=("w_tile", "has_scratch_row"))
 def migrate(data: jax.Array, src: jax.Array, dst: jax.Array,
-            ok: jax.Array, *, w_tile: int = 512) -> jax.Array:
-    """data: [n_slots, W]; src/dst/ok: [n_moves]. Caller contract for the
-    ACTIVE moves: disjoint src/dst sets OR left-packing order (see
-    migrate.py). Masked moves (ok=False) are routed to a scratch row
-    appended below the pool — NOT turned into self-copies, because a
-    masked entry's slot may be an earlier move's destination, and a grid
-    step reads the pre-kernel value (re-writing stale bytes over the
-    fresh copy)."""
+            ok: jax.Array, *, w_tile: int = 512,
+            has_scratch_row: bool = False) -> jax.Array:
+    """data: [n_slots(+1), W]; src/dst/ok: [n_moves]. Caller contract for
+    the ACTIVE moves: disjoint src/dst sets OR left-packing order (see
+    migrate.py). Masked moves (ok=False) are routed to a scratch row —
+    NOT turned into self-copies, because a masked entry's slot may be an
+    earlier move's destination, and a grid step reads the pre-kernel
+    value (re-writing stale bytes over the fresh copy).
+
+    `has_scratch_row=True` declares that the caller's pool layout already
+    carries a permanent scratch row as data's LAST row (core/pool.py) —
+    masked moves copy that row onto itself (a no-op for its all-zero
+    invariant) and NO whole-pool pad copy happens; on TPU with
+    lane-aligned slot widths the kernel aliases the pool in place. With
+    False (standalone use, kernel sweeps) a scratch row is appended,
+    which costs one pool copy per call."""
     n, w = data.shape
-    scratch = jnp.int32(n)
+    if has_scratch_row:
+        scratch = jnp.int32(n - 1)
+        padded = _pad_to(data, LANE, 1)
+    else:
+        scratch = jnp.int32(n)
+        # one pad covers both the lane alignment and the scratch row (a
+        # second concatenate would copy the whole pool again)
+        padded = jnp.pad(data, ((0, 1), (0, (-w) % LANE)))
     src_eff = jnp.where(ok, src, scratch).astype(jnp.int32)
     dst_eff = jnp.where(ok, dst, scratch).astype(jnp.int32)
-    # one pad covers both the lane alignment and the scratch row (a
-    # second concatenate would copy the whole pool again)
-    padded = jnp.pad(data, ((0, 1), (0, (-w) % LANE)))
     out = _mig.migrate_pallas(padded, src_eff, dst_eff,
                               w_tile=_tile(padded.shape[1], w_tile),
                               interpret=_interpret())
@@ -80,7 +92,9 @@ def access_scan(table: jax.Array, ciw_threshold: jax.Array, *,
                 sb_slots: int, n_sbs: int, with_hist: bool = True):
     """table: [N] uint32. Returns (new_table, to_hot bool, to_cold bool,
     hist [n_sbs] int32 — zeros when with_hist=False, which statically
-    skips the one-hot contraction for callers that discard it)."""
+    skips the one-hot contraction for callers that discard it,
+    skipped_atc [] int32 — the ATC-vetoed count, folded into the sweep so
+    the collector's use_pallas path never re-reads table fields)."""
     n = table.shape[0]
     padded = _pad_to(table, LANE, axis=0)  # pad words are FREE=0b? pad=0
     # pad words decode as heap=NEW,slot=0,access=0 -> not live? heap 0 is
@@ -89,12 +103,12 @@ def access_scan(table: jax.Array, ciw_threshold: jax.Array, *,
         from repro.core import object_table as ot
         pad_word = ot.free_word()
         padded = padded.at[n:].set(pad_word)
-    new_t, to_hot, to_cold, hist = _scan.access_scan_pallas(
+    new_t, to_hot, to_cold, hist, skipped = _scan.access_scan_pallas(
         padded, ciw_threshold, sb_slots, n_sbs,
         rows_tile=_tile(padded.shape[0] // LANE, 64),
         with_hist=with_hist, interpret=_interpret())
     return (new_t[:n], to_hot[:n].astype(bool), to_cold[:n].astype(bool),
-            hist)
+            hist, skipped)
 
 
 # ---------------------------------------------------------------------------

@@ -33,7 +33,9 @@ def access_scan(table: jax.Array, ciw_threshold: jax.Array, sb_slots: int,
     Returns (new_table [N] with CIW updated,
              to_hot [N] bool, to_cold [N] bool,
              sb_hot_hist [n_sbs] int32 — accessed-object count per
-             superblock of the object's *current* slot)."""
+             superblock of the object's *current* slot,
+             skipped_atc [] int32 — live objects the classifier wanted to
+             act on but the ATC lock-free rule vetoed this pass)."""
     live = ot.is_live(table)
     acc = (ot.access_of(table) == 1) & live
     atc = ot.atc_of(table)
@@ -51,7 +53,10 @@ def access_scan(table: jax.Array, ciw_threshold: jax.Array, sb_slots: int,
     sb = (ot.slot_of(table) // sb_slots).astype(jnp.int32)
     hist = jnp.zeros((n_sbs,), jnp.int32).at[
         jnp.where(acc, sb, n_sbs)].add(1, mode="drop")
-    return new_table, to_hot, to_cold, hist
+    skipped = jnp.sum(live & (atc > 0) &
+                      (acc | ((ciw > ct) & (heap != ot.COLD)))
+                      ).astype(jnp.int32)
+    return new_table, to_hot, to_cold, hist, skipped
 
 
 # ---------------------------------------------------------------------------

@@ -3,10 +3,12 @@
 The representative framework application of the paper (DESIGN.md §3.1):
 decode-time KV blocks are *objects* in a HadesPool — each block is
 `block_tokens` of K+V for one layer of one sequence. All reads go through
-the object table (the dereference), the Pallas `paged_attention` kernel
-records access bits as a by-product of its DMAs, and the Object Collector
-densifies hot blocks (recent windows, attention sinks) into HOT
-superblocks while cold prefixes drift to COLD and get paged to host.
+the object table (the dereference); on TPU the Pallas `paged_attention`
+kernel records access bits as a by-product of its DMAs (on CPU the jnp
+oracle computes the same bits — interpret-mode kernel emulation is
+correctness-only, see `attend`), and the Object Collector densifies hot
+blocks (recent windows, attention sinks) into HOT superblocks while cold
+prefixes drift to COLD and get paged to host.
 
 Logical object id = ((layer * batch) + seq) * max_blocks + block_idx.
 Block tables hold LOGICAL ids; physical slots are resolved through the
@@ -78,60 +80,103 @@ def init(cfg: KVCacheConfig) -> Dict:
 # ---------------------------------------------------------------------------
 def append(cfg: KVCacheConfig, state: Dict, k: jax.Array, v: jax.Array
            ) -> Dict:
-    """k/v: [L, B, KV, D] (one new token per sequence). Allocates fresh
-    blocks at block boundaries, then scatters the token into each block's
-    slot at the intra-block offset."""
+    """k/v: [L, B, KV, D] (one new token per sequence). A layer-major
+    loop over `append_layer` (ONE capacity-guard/overflow-drop
+    implementation — the slot assignment is identical either way) plus
+    the step's pos advance. Tokens past cfg.max_blocks capacity are
+    DROPPED (never written) — an unguarded write would clamp into a live
+    object's slot and corrupt another sequence's KV."""
+    for li in range(cfg.num_layers):
+        state = append_layer(cfg, state, li, k[li], v[li])
+    return advance_pos(state)
+
+
+def append_layer(cfg: KVCacheConfig, state: Dict, layer, k: jax.Array,
+                 v: jax.Array) -> Dict:
+    """k/v: [B, KV, D] — ONE layer's k/v for the current token, for the
+    server's fused per-layer decode transition (qkv -> append -> attend
+    with `h` advanced through each layer, which `append` cannot express:
+    it needs all layers' k/v up front). `layer` may be a traced index
+    (the decode layer scan). Does NOT advance `pos` — the caller calls
+    `advance_pos` once per step, after all layers. Slot assignment is
+    identical to `append`'s (allocations are layer-major either way);
+    tokens past cfg.max_blocks capacity are dropped, like `append`."""
     pcfg = cfg.pool_config()
     pos = state["pos"]                       # [B]
-    blk = pos // cfg.block_tokens            # [B]
-    off = pos % cfg.block_tokens             # [B]
-    l_idx = jnp.arange(cfg.num_layers)[:, None]
-    b_idx = jnp.arange(cfg.batch)[None, :]
-    obj = ((l_idx * cfg.batch + b_idx) * cfg.max_blocks + blk[None, :]
-           ).astype(jnp.int32)               # [L, B]
+    blk = pos // cfg.block_tokens
+    off = pos % cfg.block_tokens
+    fits = blk < cfg.max_blocks              # [B] capacity guard
+    b_idx = jnp.arange(cfg.batch)
+    obj = ((layer * cfg.batch + b_idx) * cfg.max_blocks + blk
+           ).astype(jnp.int32)               # [B]
 
-    # allocate blocks where off == 0 (start of a new block)
-    need = jnp.broadcast_to(off[None, :] == 0, obj.shape)
+    need = (off == 0) & fits
     pool = state["pool"]
-    zeros = jnp.zeros((cfg.num_layers * cfg.batch, pcfg.slot_words),
-                      pool["data"].dtype)
-    pool = pl.alloc(pcfg, pool, jnp.where(need, obj, -1).reshape(-1), zeros)
-    bt = state["block_tables"].at[
-        l_idx, b_idx, jnp.broadcast_to(blk[None, :], obj.shape)
-    ].set(jnp.where(need, obj, state["block_tables"][
-        l_idx, b_idx, jnp.broadcast_to(blk[None, :], obj.shape)]))
+    zeros = jnp.zeros((cfg.batch, pcfg.slot_words), pool["data"].dtype)
+    pool = pl.alloc(pcfg, pool, jnp.where(need, obj, -1), zeros)
+    blk_safe = jnp.minimum(blk, cfg.max_blocks - 1)
+    bt = state["block_tables"].at[layer, b_idx, blk].set(
+        jnp.where(need, obj,
+                  state["block_tables"][layer, b_idx, blk_safe]),
+        mode="drop")
 
-    # scatter the token into each block slot at offset `off`
-    words = pool["table"][obj.reshape(-1)]
-    slots = ot.slot_of(words).astype(jnp.int32).reshape(cfg.num_layers,
-                                                        cfg.batch)
+    words = pool["table"][jnp.minimum(obj, cfg.max_objects - 1)]
+    slots = ot.slot_of(words).astype(jnp.int32)         # [B]
     data = pool["data"].reshape(
         -1, 2, cfg.block_tokens, cfg.num_kv_heads, cfg.head_dim)
-    kv_tok = jnp.stack([k, v], axis=2)        # [L, B, 2, KV, D]
-    data = data.at[slots, :, off[None, :], :, :].set(
-        kv_tok.astype(data.dtype))
+    # overflow lanes route out of bounds and are dropped, never clamped
+    slots = jnp.where(fits, slots, data.shape[0])
+    kv_tok = jnp.stack([k, v], axis=1)        # [B, 2, KV, D]
+    data = data.at[slots, :, off, :, :].set(kv_tok.astype(data.dtype),
+                                            mode="drop")
     pool = dict(pool, data=data.reshape(pool["data"].shape))
-    return dict(state, pool=pool,
-                block_tables=bt, pos=pos + 1)
+    return dict(state, pool=pool, block_tables=bt)
+
+
+def advance_pos(state: Dict) -> Dict:
+    """One decode step consumed (all layers appended): pos += 1."""
+    return dict(state, pos=state["pos"] + 1)
 
 
 # ---------------------------------------------------------------------------
 # attend — decode attention through the table (Pallas kernel) + tracking
 # ---------------------------------------------------------------------------
-def attend(cfg: KVCacheConfig, state: Dict, layer: int, q: jax.Array
-           ) -> Tuple[jax.Array, Dict]:
-    """q: [B, H, D] -> (out [B, H, D], state with access recorded)."""
+def attend(cfg: KVCacheConfig, state: Dict, layer: int, q: jax.Array,
+           *, seq_lens: Optional[jax.Array] = None,
+           use_pallas: Optional[bool] = None) -> Tuple[jax.Array, Dict]:
+    """q: [B, H, D] -> (out [B, H, D], state with access recorded).
+    `layer` may be a traced index (the server's decode layer scan).
+    `seq_lens` defaults to state["pos"] — correct when the caller has
+    already advanced pos past the appended token (`append`); the
+    per-layer flow (`append_layer`, pos still pointing AT the new token)
+    must pass pos + 1 so the token attends to itself.
+
+    `use_pallas=None` picks the implementation by backend, mirroring the
+    collector's CollectorConfig(use_pallas) split: the Pallas kernel
+    (with its fused access-bit recording) compiles natively on TPU, while
+    CPU runs the pure-jnp oracle — interpret-mode kernel emulation is
+    correctness-only and orders of magnitude too slow for the serving
+    hot path (tests/test_kernels.py keeps the two bit-compatible on the
+    touched bits and within fp tolerance on the outputs)."""
     pcfg = cfg.pool_config()
     pool = state["pool"]
     tbl = state["block_tables"][layer]               # [B, MB] logical ids
     live = tbl >= 0
     words = pool["table"][jnp.maximum(tbl, 0)]
     slots = jnp.where(live, ot.slot_of(words).astype(jnp.int32), -1)
+    lens = state["pos"] if seq_lens is None else seq_lens
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
 
     pages = pool["data"].reshape(
         -1, 2, cfg.block_tokens, cfg.num_kv_heads, cfg.head_dim)
-    out, touched = kops.paged_attention(
-        q, pages[:, 0], pages[:, 1], slots, state["pos"])
+    if use_pallas:
+        out, touched = kops.paged_attention(
+            q, pages[:, 0], pages[:, 1], slots, lens)
+    else:
+        from repro.kernels import ref as kref
+        out, touched = kref.paged_attention(
+            q, pages[:, 0], pages[:, 1], slots, lens, cfg.block_tokens)
 
     # the kernel's fused access bits -> object-table access bits
     touched_ids = jnp.where(touched & live, tbl, -1).reshape(-1)

@@ -139,8 +139,8 @@ class Model:
     def init_decode_state(self, batch: int, max_len: int, enc_out=None):
         return T.init_decode_state(self.cfg, batch, max_len, enc_out=enc_out)
 
-    def decode_step(self, params, state, tokens):
-        return T.lm_decode_step(params, self.cfg, state, tokens)
+    def decode_step(self, params, state, tokens, **kw):
+        return T.lm_decode_step(params, self.cfg, state, tokens, **kw)
 
 
 def build(arch_id: str, reduced: bool = False, **kw) -> Model:

@@ -61,6 +61,18 @@ def init_moe(key, cfg: ModelConfig, dtype) -> dict:
     }
 
 
+def capacity(t: int, cfg: ModelConfig,
+             capacity_factor: float = 1.25) -> int:
+    """Per-expert token capacity G used by `moe_block`'s dispatch for `t`
+    tokens — the drop threshold: a layer whose routing counts exceed it
+    silently drops the overflow (their contribution is zero; the residual
+    stream carries them). Exposed so tests/diagnostics can attribute
+    decode/prefill divergence to capacity drops."""
+    e, k = cfg.num_experts, cfg.experts_per_token
+    g = int(max(8, -(-t * k // e) * capacity_factor))  # ceil with slack
+    return -(-g // 8) * 8                              # pad to 8
+
+
 def moe_block(p: dict, x: jax.Array, cfg: ModelConfig,
               capacity_factor: float = 1.25
               ) -> Tuple[jax.Array, jax.Array, jax.Array]:
@@ -98,8 +110,7 @@ def moe_block(p: dict, x: jax.Array, cfg: ModelConfig,
                               jnp.cumsum(counts)[:-1]])
     rank = jnp.arange(n, dtype=jnp.int32) - starts[se]         # intra-expert rank
 
-    g = int(max(8, -(-t * k // e) * capacity_factor))          # ceil with slack
-    g = -(-g // 8) * 8                                         # pad to 8
+    g = capacity(t, cfg, capacity_factor)
     keep = rank < g
     dest = jnp.where(keep, se * g + rank, n)                   # n = drop bin
 

@@ -151,29 +151,25 @@ def _pos2d(positions, b, s):
 # ---------------------------------------------------------------------------
 # Decode-mode attention block
 # ---------------------------------------------------------------------------
-def attn_block_decode(p: dict, x: jax.Array, cfg: ModelConfig, cache: dict,
-                      pos, enc_kv=None):
-    """x: [B,1,D]; cache: {"k","v": [B,C,KV,Dh], "k_pos": [B,C]}. Appends the
-    new token at slot pos % C (ring for SWA, linear otherwise) and attends.
-    Returns (x, new_cache, counts)."""
+def decode_layer_step(p: dict, x: jax.Array, cfg: ModelConfig, positions,
+                      attend_fn, enc_kv=None):
+    """One decoder layer of single-token decode — THE single place the
+    layer math lives, with the KV mechanics supplied by the caller:
+    `attn_block_decode` plugs in the dense ring cache, the paged server
+    (runtime/server.py) plugs in HadesPool append+attend. `_qkv` runs
+    exactly once per layer (the old server derived it twice, and its
+    two-phase k/v loop computed deep layers' k/v from the embedding —
+    the decode corruption this hoist removes).
+
+    x: [B,1,D]; positions: [B,1] (per-sequence positions, pre-broadcast);
+    attend_fn(q, k, v) -> (attn out reshapeable to [B,1,H*Dh], aux) with
+    q [B,1,H,Dh], k/v [B,1,KV,Dh]; `aux` is whatever cache/pool state the
+    caller must thread onward. Returns (x', aux, expert_counts)."""
     b = x.shape[0]
     hd = cfg.resolved_head_dim
     h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
-    positions = jnp.broadcast_to(jnp.reshape(pos, (1, 1)), (b, 1))
     q, k, v = _qkv(p, h, cfg, positions)
-    c = cache["k"].shape[1]
-    slot = pos % c
-    k_cache = jax.lax.dynamic_update_slice_in_dim(
-        cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
-    v_cache = jax.lax.dynamic_update_slice_in_dim(
-        cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
-    k_pos = jax.lax.dynamic_update_slice_in_dim(
-        cache["k_pos"], jnp.broadcast_to(jnp.reshape(pos, (1, 1)), (b, 1)),
-        slot, axis=1)
-    cache_len = jnp.minimum(pos + 1, c)
-    o = attn_lib.decode_attention(q, k_cache, v_cache, cache_len,
-                                  window=cfg.sliding_window,
-                                  k_pos=k_pos, q_pos=pos)
+    o, aux = attend_fn(q, k, v)
     x = x + jnp.einsum("bse,ed->bsd", o.reshape(b, 1, -1), p["wo"])
 
     if enc_kv is not None:
@@ -196,8 +192,35 @@ def attn_block_decode(p: dict, x: jax.Array, cfg: ModelConfig, cache: dict,
             f, _, counts = moe_lib.moe_block(p["moe"], h2, cfg)
     else:
         f = L.mlp(p["ffn"], h2, cfg.mlp_gated)
-    new_cache = {"k": k_cache, "v": v_cache, "k_pos": k_pos}
-    return x + f, new_cache, counts
+    return x + f, aux, counts
+
+
+def attn_block_decode(p: dict, x: jax.Array, cfg: ModelConfig, cache: dict,
+                      pos, enc_kv=None):
+    """x: [B,1,D]; cache: {"k","v": [B,C,KV,Dh], "k_pos": [B,C]}. Appends the
+    new token at slot pos % C (ring for SWA, linear otherwise) and attends.
+    Returns (x, new_cache, counts)."""
+    b = x.shape[0]
+    positions = jnp.broadcast_to(jnp.reshape(pos, (1, 1)), (b, 1))
+    c = cache["k"].shape[1]
+
+    def attend(q, k, v):
+        slot = pos % c
+        k_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
+        k_pos = jax.lax.dynamic_update_slice_in_dim(
+            cache["k_pos"],
+            jnp.broadcast_to(jnp.reshape(pos, (1, 1)), (b, 1)),
+            slot, axis=1)
+        cache_len = jnp.minimum(pos + 1, c)
+        o = attn_lib.decode_attention(q, k_cache, v_cache, cache_len,
+                                      window=cfg.sliding_window,
+                                      k_pos=k_pos, q_pos=pos)
+        return o, {"k": k_cache, "v": v_cache, "k_pos": k_pos}
+
+    return decode_layer_step(p, x, cfg, positions, attend, enc_kv=enc_kv)
 
 
 # ---------------------------------------------------------------------------
@@ -257,10 +280,12 @@ def lm_forward(params: dict, cfg: ModelConfig, tokens: jax.Array, *,
                extra_embeds: Optional[jax.Array] = None,
                enc_embeds: Optional[jax.Array] = None,
                attn_impl: str = "blockwise", remat: str = "none",
-               return_cache: bool = False):
+               return_cache: bool = False, return_hiddens: bool = False):
     """tokens: [B, S_txt]. extra_embeds (VLM patches): [B, P, D] prepended.
     enc_embeds (enc-dec audio frames): [B, S_enc, D].
-    Returns logits [B, S, V] (+ aux dict)."""
+    Returns logits [B, S, V] (+ aux dict). `return_hiddens` (attn-family
+    layers only) adds aux["hiddens"] [L, B, S, D] — the post-layer
+    residual stream, for per-layer decode/prefill divergence reports."""
     x = L.embed(params["embed"], tokens)
     if extra_embeds is not None:
         x = jnp.concatenate([extra_embeds.astype(x.dtype), x], axis=1)
@@ -277,6 +302,8 @@ def lm_forward(params: dict, cfg: ModelConfig, tokens: jax.Array, *,
     aux_total = jnp.zeros((), jnp.float32)
     counts_total = jnp.zeros((max(cfg.num_experts, 1),), jnp.int32)
     cache = None
+    counts_per_layer = None
+    hs = None
 
     if cfg.family == "ssm":
         def body(h, lp):
@@ -296,11 +323,13 @@ def lm_forward(params: dict, cfg: ModelConfig, tokens: jax.Array, *,
             h, aux, kv, cnt = attn_ffn_block(
                 lp, h, cfg, positions, attn_impl=attn_impl,
                 enc_kv=_enc_kv(lp, enc_out, cfg) if enc_out is not None else None)
-            return h, (aux, cnt, kv if return_cache else None)
+            return h, (aux, cnt, kv if return_cache else None,
+                       h if return_hiddens else None)
         body = _maybe_remat(body, remat)
-        x, (auxs, cnts, kvs) = _scan(body, x, params["layers"])
+        x, (auxs, cnts, kvs, hs) = _scan(body, x, params["layers"])
         aux_total = jnp.sum(auxs)
         counts_total = jnp.sum(cnts, axis=0)
+        counts_per_layer = cnts
         if return_cache:
             cache = kvs
 
@@ -308,9 +337,14 @@ def lm_forward(params: dict, cfg: ModelConfig, tokens: jax.Array, *,
     out_t = params["embed"].T if cfg.tie_embeddings else params["out"]
     logits = L.logits_head(out_t, x)
     aux = {"moe_aux_loss": aux_total, "expert_counts": counts_total}
+    if counts_per_layer is not None:
+        aux["expert_counts_per_layer"] = counts_per_layer
     if return_cache:
         aux["kv_cache"] = cache
         aux["enc_out"] = enc_out
+    if return_hiddens:
+        assert hs is not None, "return_hiddens: attn-family layers only"
+        aux["hiddens"] = hs
     return logits, aux
 
 
@@ -418,8 +452,10 @@ def init_decode_state(cfg: ModelConfig, batch: int, max_len: int,
 
 
 def lm_decode_step(params: dict, cfg: ModelConfig, state: dict,
-                   tokens: jax.Array) -> Tuple[jax.Array, dict]:
-    """tokens: [B] -> (logits [B, V], new state). One token per sequence."""
+                   tokens: jax.Array, *, return_hiddens: bool = False):
+    """tokens: [B] -> (logits [B, V], new state). One token per sequence.
+    `return_hiddens` (attn family only) appends a third output: the
+    post-layer residual stream [L, B, 1, D] for divergence reports."""
     b = tokens.shape[0]
     x = L.embed(params["embed"], tokens)[:, None, :]  # [B,1,D]
     pos = state["pos"]
@@ -459,13 +495,17 @@ def lm_decode_step(params: dict, cfg: ModelConfig, state: dict,
             h, new_kv, cnt = attn_block_decode(
                 lp, h, cfg, kvc, pos,
                 enc_kv=_enc_kv(lp, enc_out, cfg) if enc_out is not None else None)
-            return h, (new_kv, cnt)
-        x, (new_kv, cnts) = _scan(body, x, (params["layers"],
-                                            state["kv"]))
+            return h, (new_kv, cnt, h if return_hiddens else None)
+        x, (new_kv, cnts, hs) = _scan(body, x, (params["layers"],
+                                                state["kv"]))
         counts_total = jnp.sum(cnts, axis=0)
         state = dict(state, kv=new_kv, pos=pos + 1)
 
     x = L.rms_norm(x, params["final_ln"], cfg.norm_eps)
     out_t = params["embed"].T if cfg.tie_embeddings else params["out"]
     logits = L.logits_head(out_t, x)[:, 0]
+    if return_hiddens:
+        assert cfg.family not in ("ssm", "hybrid"), \
+            "return_hiddens: attn-family layers only"
+        return logits, state, hs
     return logits, state

@@ -1,9 +1,24 @@
 """Batched decode server with the HADES-managed paged KV cache.
 
-Serving loop per step: embed -> per-layer (qkv, paged-attend through the
-object table, ffn) -> logits -> sample; every `collect_every` steps the
-Object Collector tidies the KV pool (arm the window one step earlier —
-the epoch protocol) and the backend reclaims cold superblocks.
+The serving hot path runs as SCANNED DECODE WINDOWS: `decode_window`
+executes W decode steps — embed, per-layer (qkv -> paged append -> attend
+through the object table -> ffn), logits, sample, and the window-closing
+collect+MIAD+backend — as ONE jitted `lax.scan`, built on the same
+`engine.window_program` machinery (and therefore the same op-clock /
+collect-cadence contract) as `Engine.run_window`. `decode_step` is the
+per-step reference path: the identical transition, one dispatch per
+token, bit-identical to the windowed path (tests/test_server_window.py).
+
+Per layer the residual stream `h` advances BEFORE the next layer's k/v is
+derived (each layer's k/v is a function of the previous layers' output —
+the old two-phase loop computed every layer's k/v from the embedding and
+wrote corrupted bytes into the paged pool).
+
+`overlap_collect=True` is the double-buffered serving loop the ATC/arm
+epoch protocol exists for: windows arm one step before closing (objects
+dereferenced by an in-flight step carry ATC > 0 and are never migrated),
+and `generate` defers each window's report sync until the NEXT window's
+dispatch has been issued — collection resolves while decode runs.
 
 Continuous batching-lite: finished sequences free their KV blocks and
 their lanes are refilled from the pending queue.
@@ -12,7 +27,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -20,9 +35,11 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.core import backend as be
 from repro.core import collector as col
+from repro.core import engine as eng
 from repro.core import pool as pl
 from repro.models import kvcache as kvc
 from repro.models import layers as L
+from repro.models import transformer as T
 
 
 @dataclasses.dataclass
@@ -33,6 +50,15 @@ class ServerConfig:
     collect_every: int = 8
     backend: str = "proactive"
     eos_token: int = 2
+    # decode-window length W used by `generate` (0 -> collect_every):
+    # W steps run as ONE dispatch, window protocol included
+    window: int = 0
+    # double-buffered serving: windows arm the ATC epoch one step before
+    # closing, and `generate` syncs window N's report only after window
+    # N+1's dispatch is in flight
+    overlap_collect: bool = False
+    # route the collector through the Pallas kernels (interpret on CPU)
+    use_pallas: bool = False
 
 
 class Server:
@@ -49,97 +75,206 @@ class Server:
             max_blocks=-(-cfg.max_len // cfg.block_tokens),
             block_tokens=cfg.block_tokens, num_kv_heads=mc.num_kv_heads,
             head_dim=mc.resolved_head_dim, dtype=mc.dtype)
-        self.col_cfg = col.CollectorConfig()
+        self.col_cfg = col.CollectorConfig(use_pallas=cfg.use_pallas)
         self.be_cfg = be.BackendConfig(kind=cfg.backend)
         self.state = kvc.init(self.kv_cfg)
-        self._steps = 0
+        self._steps = 0                     # host mirror of the op clock
+        self._last_tok = jnp.zeros((cfg.batch,), jnp.int32)
         self.reports: List[Dict] = []
-        # collector + backend as ONE compiled transition (engine path);
-        # RSS/host gauges come back inside the report — no extra syncs
-        self._collect_fused = jax.jit(functools.partial(
-            kvc.collect_and_backend, self.kv_cfg, self.col_cfg,
-            self.be_cfg))
+        self.dispatches = 0                 # host-side dispatch count
+        self._build_programs()
+
+    # -- compiled programs -----------------------------------------------------
+    def _model_step(self, params, state, tok):
+        """The fused decode transition: tok [B] -> (state', logits [B,V]).
+        Layers run under lax.scan; each layer derives qkv from the CURRENT
+        residual stream (exactly once), appends its k/v to the paged pool
+        and attends through the object table."""
+        mc: ModelConfig = self.model.cfg
+        cfg = self.kv_cfg
+        x = L.embed(params["embed"], tok)[:, None, :]   # [B,1,D]
+        positions = state["pos"][:, None]               # [B,1]
+
+        def layer_body(carry, xs):
+            h, st = carry
+            li, lp = xs
+
+            def attend(q, k, v):
+                st2 = kvc.append_layer(cfg, st, li, k[:, 0], v[:, 0])
+                # pos still points AT the appended token (advance_pos
+                # runs after the layer scan) -> the token attends to
+                # itself via pos + 1
+                out, st3 = kvc.attend(cfg, st2, li, q[:, 0],
+                                      seq_lens=st2["pos"] + 1)
+                return out[:, None], st3                # [B,1,H,Dh]
+
+            h, st, _ = T.decode_layer_step(lp, h, mc, positions, attend)
+            return (h, st), None
+
+        (h, state), _ = jax.lax.scan(
+            layer_body, (x, state),
+            (jnp.arange(mc.num_layers), params["layers"]))
+        state = kvc.advance_pos(state)
+        h = L.rms_norm(h, params["final_ln"], mc.norm_eps)
+        out_t = params["embed"].T if mc.tie_embeddings else params["out"]
+        logits = L.logits_head(out_t, h)[:, 0]
+        return state, logits
+
+    def _build_programs(self):
+        every = int(self.cfg.collect_every)
+        overlap = bool(self.cfg.overlap_collect)
+        cab = functools.partial(kvc.collect_and_backend, self.kv_cfg,
+                                self.col_cfg, self.be_cfg)
+
+        def win_step(params, carry, forced):
+            """One window step: forced token (>= 0) or self-feed the
+            previously sampled one; greedy sample for the next step."""
+            tok = jnp.where(forced >= 0, forced, carry["tok"])
+            kvstate, logits = self._model_step(params, carry["kv"], tok)
+            nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+            return (dict(kv=kvstate, tok=nxt),
+                    {"logits": logits, "tok": nxt})
+
+        def win_collect(carry):
+            kvstate, report = cab(carry["kv"])
+            return dict(carry, kv=kvstate), report
+
+        def win_arm(carry):
+            return dict(carry, kv=kvc.arm(carry["kv"]))
+
+        def _programs(params):
+            return eng.window_program(
+                functools.partial(win_step, params), win_collect, win_arm,
+                every=every, overlap=overlap)
+
+        def aligned(params, carry, toks):
+            return _programs(params)[1](carry, toks)
+
+        def generic(params, carry, toks, step0):
+            return _programs(params)[0](carry, toks, step0)
+
+        def step_apply(params, carry, tok, do_arm, do_collect):
+            """decode_step's program: the identical transition, collect
+            and arm fused in statically (the host knows the clock)."""
+            carry, out = win_step(params, carry, tok)
+            if do_arm:
+                carry = win_arm(carry)
+            if do_collect:
+                carry, report = win_collect(carry)
+            else:
+                report = eng.zero_report()
+            return carry, out, report
+
+        self._win_aligned = jax.jit(aligned)
+        self._win_generic = jax.jit(generic)
+        self._step_apply = jax.jit(
+            step_apply, static_argnames=("do_arm", "do_collect"))
 
     # -- one decode step across the batch -------------------------------------
     def decode_step(self, params, tokens: jax.Array
                     ) -> Tuple[jax.Array, None]:
-        """tokens: [B] -> logits [B, V]. Appends to the paged cache and
-        attends through the object table with the Pallas kernel."""
-        mc: ModelConfig = self.model.cfg
-        cfg = self.kv_cfg
-        x = L.embed(params["embed"], tokens)[:, None, :]   # [B,1,D]
-        pos = self.state["pos"]
-        b = tokens.shape[0]
-        hd = mc.resolved_head_dim
-
-        # compute all layers' k/v for this token, append once, then attend
-        ks, vs, hs = [], [], []
-        h = x
-        layers = params["layers"]
-        positions = pos[:, None]
-        from repro.models import transformer as T
-        for li in range(mc.num_layers):
-            lp = jax.tree.map(lambda a: a[li], layers)
-            hn = L.rms_norm(h, lp["ln1"], mc.norm_eps)
-            q, k, v = T._qkv(lp, hn, mc, positions)
-            ks.append(k[:, 0])
-            vs.append(v[:, 0])
-            hs.append((lp, q))
-            # placeholder: h advanced after appends (two-phase)
-        kv_k = jnp.stack(ks)                    # [L, B, KV, D]
-        kv_v = jnp.stack(vs)
-        self.state = kvc.append(cfg, self.state, kv_k, kv_v)
-
-        h = x
-        for li in range(mc.num_layers):
-            lp, q = hs[li]
-            hn = L.rms_norm(h, lp["ln1"], mc.norm_eps)
-            q, _, _ = T._qkv(lp, hn, mc, pos[:, None])
-            out, self.state = kvc.attend(cfg, self.state, li, q[:, 0])
-            h = h + jnp.einsum("be,ed->bd", out.reshape(b, -1),
-                               lp["wo"])[:, None]
-            h2 = L.rms_norm(h, lp["ln2"], mc.norm_eps)
-            if mc.num_experts:
-                from repro.models import moe as moe_lib
-                f, _, _ = moe_lib.moe_block(lp["moe"], h2, mc)
-            else:
-                f = L.mlp(lp["ffn"], h2, mc.mlp_gated)
-            h = h + f
-
-        h = L.rms_norm(h, params["final_ln"], mc.norm_eps)
-        out_t = params["embed"].T if mc.tie_embeddings else params["out"]
-        logits = L.logits_head(out_t, h)[:, 0]
-
-        # HADES cadence: collect -> backend. The loop is synchronous (the
-        # step completed before the collector runs) so the window is NOT
-        # armed — ATC arming is for runtimes that overlap dispatch with
-        # collection (see HadesOptions.overlap_collect).
-        self._steps += 1
+        """tokens: [B] -> (logits [B, V], None). ONE dispatch: the model
+        step plus — statically, from the host-side window clock — the ATC
+        arm and the fused collect+MIAD+backend. The per-step reference
+        for `decode_window` (bit-identical transitions)."""
+        nxt = self._steps + 1
         every = self.cfg.collect_every
-        if self._steps % every == 0:
-            # one dispatch: collect + MIAD + candidate marking + backend,
-            # with the RSS/host gauges computed on-device (engine path)
-            self.state, report = self._collect_fused(self.state)
+        do_arm = bool(self.cfg.overlap_collect) and \
+            nxt % every == every - 1
+        do_collect = nxt % every == 0
+        carry = {"kv": self.state, "tok": self._last_tok}
+        carry, out, report = self._step_apply(
+            params, carry, jnp.asarray(tokens, jnp.int32),
+            do_arm=do_arm, do_collect=do_collect)
+        self.state, self._last_tok = carry["kv"], carry["tok"]
+        self._steps += 1
+        self.dispatches += 1
+        if do_collect:
             self.reports.append({k: float(v) for k, v in report.items()})
-        return logits, None
+        return out["logits"], None
+
+    # -- scanned decode windows ------------------------------------------------
+    def decode_window(self, params, tokens: jax.Array,
+                      w: Optional[int] = None):
+        """Run a whole decode window as ONE dispatch.
+
+        tokens: [B, T] int32 — entries >= 0 are teacher-forced, entries
+        < 0 self-feed the previously sampled token; or [B] (a seed token
+        per sequence) with `w` given, running `w` steps (seed then
+        self-feed). Every step embeds, runs all layers (paged append +
+        attend), computes logits and samples; window-closing steps run
+        the fused collect+MIAD+backend in the same program (and, with
+        overlap_collect, arm the ATC epoch one step earlier). Uses the
+        cond-free window-aligned program when T and the op clock align
+        with collect_every, the generic cond-gated one otherwise.
+
+        Returns (logits [B, T, V], sampled [B, T], per-step report
+        pytree — feed to engine.window_reports to extract the collects)."""
+        toks = jnp.asarray(tokens, jnp.int32)
+        if toks.ndim == 1:
+            toks = jnp.concatenate(
+                [toks[:, None],
+                 jnp.full((toks.shape[0], (w or 1) - 1), -1, jnp.int32)],
+                axis=1)
+        toks = toks.T                                   # scan axis first
+        t = int(toks.shape[0])
+        every = self.cfg.collect_every
+        carry = {"kv": self.state, "tok": self._last_tok}
+        if t > 0 and t % every == 0 and self._steps % every == 0:
+            carry, outs, reports = self._win_aligned(params, carry, toks)
+        else:
+            carry, outs, reports = self._win_generic(params, carry, toks,
+                                                     self._steps)
+        self.state, self._last_tok = carry["kv"], carry["tok"]
+        self._steps += t
+        self.dispatches += 1
+        return (outs["logits"].transpose(1, 0, 2), outs["tok"].T, reports)
 
     # -- generate --------------------------------------------------------------
     def generate(self, params, prompts: jax.Array, max_new: int,
                  *, greedy: bool = True, key=None) -> jax.Array:
-        """prompts: [B, P] (decoded token-by-token — prefill through the
-        same paged path exercises HADES on the prefix blocks)."""
+        """prompts: [B, P], teacher-forced through the same scanned decode
+        path (prefill exercises HADES on the prefix blocks), then
+        `max_new` greedy tokens — window-by-window (W = cfg.window or
+        collect_every), O(tokens / W) dispatches.
+
+        With overlap_collect the loop is double-buffered: window N's
+        report sync (the only host<->device round trip) happens only
+        after window N+1's dispatch is in flight, so collection resolves
+        while the next window decodes."""
         b, p = prompts.shape
-        outs = []
-        tok = None
-        for t in range(p):
-            logits, _ = self.decode_step(params, prompts[:, t])
-        tok = jnp.argmax(logits, -1).astype(jnp.int32)
-        outs.append(tok)
-        for _ in range(max_new - 1):
-            logits, _ = self.decode_step(params, tok)
-            tok = jnp.argmax(logits, -1).astype(jnp.int32)
-            outs.append(tok)
-        return jnp.stack(outs, axis=1)
+        if max_new <= 0:
+            return jnp.zeros((b, 0), jnp.int32)
+        total = p + max_new - 1
+        forced = jnp.concatenate(
+            [jnp.asarray(prompts, jnp.int32),
+             jnp.full((b, max_new - 1), -1, jnp.int32)], axis=1)
+        w = self.cfg.window or self.cfg.collect_every
+        sampled = []
+        pending = None
+        for lo in range(0, total, w):
+            _, toks, rep = self.decode_window(params, forced[:, lo:lo + w])
+            sampled.append(toks)
+            if self.cfg.overlap_collect:
+                if pending is not None:
+                    self.reports.extend(eng.window_reports(pending))
+                pending = rep
+            else:
+                self.reports.extend(eng.window_reports(rep))
+        if pending is not None:
+            self.reports.extend(eng.window_reports(pending))
+        out = jnp.concatenate(sampled, axis=1)          # [B, total]
+        return out[:, p - 1:]
+
+    def reset(self) -> None:
+        """Fresh serving state (empty pool, zeroed clock/reports) without
+        dropping the compiled programs — shapes are geometry-only, so
+        benchmarks and multi-request drivers restart instantly."""
+        self.state = kvc.init(self.kv_cfg)
+        self._steps = 0
+        self._last_tok = jnp.zeros((self.cfg.batch,), jnp.int32)
+        self.reports = []
+        self.dispatches = 0
 
     # -- metrics -----------------------------------------------------------------
     def kv_rss_bytes(self) -> float:

@@ -65,6 +65,8 @@ def test_access_scan_sweep(n, sb_slots, n_sbs, ct):
     assert np.array_equal(np.asarray(got[1]), np.asarray(want[1]))
     assert np.array_equal(np.asarray(got[2]), np.asarray(want[2]))
     assert np.array_equal(np.asarray(got[3]), np.asarray(want[3]))
+    # skipped_atc is folded into the sweep (scalar ATC-veto count)
+    assert int(got[4]) == int(want[4])
 
 
 # ---------------------------------------------------------------------------
