@@ -27,8 +27,8 @@ import numpy as np
 
 from benchmarks.common import emit_json
 from repro.core import HadesOptions, make_config
+from repro.core import backend as be
 from repro.core import engine as eng
-from repro.core.backend import BackendConfig
 from repro.core.collector import CollectorConfig
 
 
@@ -97,7 +97,7 @@ def main(smoke: bool = False, with_pallas: bool = False):
     variants = [(False, "jnp")] + ([(True, "pallas")] if with_pallas else [])
     for use_pallas, tag in variants:
         opts = HadesOptions(collect_every=every,
-                            backend=BackendConfig(kind="proactive"),
+                            backend=be.make("proactive"),
                             collector=CollectorConfig(use_pallas=use_pallas))
         engine = eng.Engine(cfg, opts)
         vals = rng.normal(size=(n_objects, cfg.slot_words)).astype(

@@ -41,6 +41,11 @@ def main(smoke: bool = False):
         "hades_reactive": dict(backend="reactive", enabled=True,
                                hbm_target_bytes=target),
         "hades_proactive": dict(backend="proactive", enabled=True),
+        # the stateful registry backends ride the same SimHeap adapter
+        "hades_mglru": dict(backend="mglru", enabled=True,
+                            hbm_target_bytes=target),
+        "hades_promote": dict(backend="promote", enabled=True,
+                              hbm_target_bytes=target),
     }
     out: List[Dict] = []
     for name, kw in systems.items():

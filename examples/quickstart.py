@@ -10,13 +10,17 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import Hades, HadesOptions, make_config
-from repro.core.backend import BackendConfig
+from repro.core import backend
 
-# a pool of 512 objects x 32 floats, superblock = 16 slots
+# a pool of 512 objects x 32 floats, superblock = 16 slots.
+# Backends come from the registry: backend.make(name, **params) — any of
+# backend.names() ('cap', 'mglru', 'null', 'proactive', 'promote',
+# 'reactive'); stateful ones (mglru, promote) carry their state across
+# windows automatically.
 cfg = make_config(max_objects=512, slot_words=32, sb_slots=16,
                   page_slots=4, slack=2.0)
 h = Hades(cfg, HadesOptions(collect_every=4,
-                            backend=BackendConfig(kind="proactive")))
+                            backend=backend.make("proactive")))
 
 ids = np.arange(512)
 vals = jnp.arange(512 * 32, dtype=jnp.float32).reshape(512, 32)

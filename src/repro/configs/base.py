@@ -43,7 +43,10 @@ class HadesConfig:
     miad_add: int = 1             # additive decrease of C_t
     # fraction of pool slots reserved for the NEW heap
     new_frac: float = 0.125
-    # backend mode: "reactive" (MADV_COLD analog) / "proactive" (PAGEOUT)
+    # tiering backend: any name registered in `repro.core.backend`
+    # ("reactive" / "proactive" / "cap" / "null" / "mglru" / "promote",
+    # see backend.names()); runtimes build it via backend.make(name),
+    # which rejects typos at construction time
     backend: str = "reactive"
     # hot-tier capacity as a fraction of total pool (cap backend analog)
     hot_capacity_frac: float = 0.5

@@ -5,7 +5,9 @@
                 HBM/host tiers, fault accounting) — jit/pjit native
   collector     Object Collector: scan, CIW, lock-free migration, compaction
   policy        MIAD feedback on the promotion rate
-  backend       page-level reclamation backends (reactive/proactive/cap/null)
+  backend       pluggable page-level reclamation backends — a registry of
+                stateful Backend implementations (reactive/proactive/cap/
+                null/mglru/promote), built via backend.make(name)
   page_util     the Page Utilization metric
   engine        fused window execution: the whole access->collect->backend
                 loop as one jitted lax.scan (one dispatch per window)

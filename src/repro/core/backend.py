@@ -1,26 +1,60 @@
-"""Page-level reclamation backends (paper §3.3 / §5.2).
+"""Page-level reclamation backends (paper §3.3 / §5.2) — a pluggable,
+registry-based, STATEFUL protocol.
 
-Backends are *object-oblivious by construction*: their only input is the
-per-superblock summary from `pool.superblock_stats` (occupancy, referenced
-bit, region id, tier, evict state) — the same information the kernel's page
-reclaim has (PTE accessed bits + LRU lists). They never see the object
-table. This enforces the paper's decoupling: the frontend engineers the
-address space; an unmodified backend acts on pages.
+Backends are *object-oblivious by construction*: their only inputs are
+per-superblock summaries (occupancy, referenced bit, region id, tier,
+evict state) — the same information the kernel's page reclaim has (PTE
+accessed bits + LRU lists) — plus their own carried state. They never see
+the object table. This enforces the paper's decoupling: the frontend
+engineers the address space; an unmodified backend acts on pages.
 
-Four backends, mirroring Figure 7's lines:
+The protocol (one implementation shared by the jit Engine AND the numpy
+SimHeap via `simheap`'s page adapter — one oracle):
 
-  ReactiveBackend   — kswapd analog: demotes only under memory pressure,
-                      preferring unreferenced superblocks (inactive list),
-                      then MADV_COLD candidates, never referenced ones
-                      unless pressure persists.
-  ProactiveBackend  — MADV_PAGEOUT analog: immediately demotes superblocks
-                      the frontend marked as candidates, gated by MIAD
-                      (`proactive_ok`).
-  CapBackend        — cgroup-limit analog: hard cap on resident bytes;
-                      evicts in address order, hot or not — the
-                      "memory-saving-first" baseline that tanks performance
-                      on a fragmented address space.
-  NullBackend       — performance-first baseline: never reclaims.
+    backend = make(name, **params)          # unknown names rejected HERE
+    bstate  = backend.init(geom)            # pytree of arrays (may be {})
+    bstate, tier, evict, telemetry = backend.step(
+        geom, bstate, stats, tier, evict, signals)
+
+  * `geom` is page geometry only: anything exposing `.n_sbs` and
+    `.sb_bytes` (`pool.PoolConfig` in production, `PageGeometry` for the
+    byte-granular simulator where a "superblock" is a 4 KiB page).
+  * `bstate` is carried across windows by the CALLER — inside the
+    Engine's fused `lax.scan` it lives in the pool-state pytree under
+    `state["bstate"]`, so stateful backends (generational aging,
+    promotion hysteresis) run inside the single-dispatch serving window.
+  * `stats` is the closing window's superblock summary
+    (`pool.superblock_stats`, pre-clear referenced bits).
+  * `signals` are frontend→backend scalars: `proactive_ok` (the MIAD
+    calm gate) and `epoch`.
+  * `telemetry` is the FIXED pytree `zero_telemetry()` — same keys for
+    every backend, so reports keep one structure across `lax.cond`
+    branches and backend swaps.
+
+Backends are frozen dataclasses (hashable, closed over by jitted window
+programs); their fields are static hyperparameters, never arrays.
+
+Registered backends, mirroring Figure 7's lines plus the multi-backend
+scaling direction (MGLRU / TPP, cf. Jenga and HybridTier in PAPERS.md):
+
+  reactive   — kswapd analog: demotes only under memory pressure,
+               preferring MADV_COLD candidates, then unreferenced
+               superblocks; referenced ones only if pressure persists
+               (`evict_referenced=False` = strict kswapd, never).
+  proactive  — MADV_PAGEOUT analog: immediately demotes superblocks the
+               frontend marked as candidates, gated by MIAD.
+  cap        — cgroup-limit analog: hard cap on resident bytes; evicts
+               in address order, hot or not — the "memory-saving-first"
+               baseline that tanks performance on a fragmented space.
+  null       — performance-first baseline: never reclaims.
+  mglru      — multi-generational LRU (stateful): per-superblock
+               generation counters aged each window; under pressure,
+               demote from the oldest generation first.
+  promote    — watermark promotion (stateful, TPP/AutoNUMA-like):
+               HOST superblocks referenced for `promote_after`
+               consecutive windows re-tier to HBM under high/low
+               watermark hysteresis; above the high watermark it
+               demotes kswapd-style back down to it.
 """
 from __future__ import annotations
 
@@ -32,67 +66,375 @@ import jax.numpy as jnp
 
 from repro.core import pool as pl
 
+# ---------------------------------------------------------------------------
+# protocol plumbing: geometry, telemetry, registry
+# ---------------------------------------------------------------------------
+
 
 @dataclasses.dataclass(frozen=True)
-class BackendConfig:
-    kind: str = "reactive"          # reactive | proactive | cap | null
-    hbm_target_bytes: int = 0       # pressure target (0 = no pressure)
+class PageGeometry:
+    """The only configuration a backend may read: how many pages exist
+    and how big they are. `pool.PoolConfig` satisfies this shape; the
+    SimHeap adapter passes one of these with a 4 KiB "superblock"."""
+    n_sbs: int
+    sb_bytes: int
 
 
-def _demote_k(tier: jax.Array, evict: jax.Array, victim_priority: jax.Array,
-              k: jax.Array) -> Tuple[jax.Array, jax.Array]:
-    """Demote the `k` highest-priority victims (priority > 0) to HOST.
-    Returns (tier, evict). Fixed-shape: uses a full sort over superblocks."""
-    n = tier.shape[0]
-    # sort descending by priority; take first k with priority > 0
+TELEMETRY_KEYS = ("be_demoted", "be_promoted")
+
+
+def zero_telemetry() -> Dict[str, jax.Array]:
+    """The fixed per-step backend telemetry pytree (int32 scalars) —
+    identical structure for every backend so window reports keep one
+    shape across `lax.cond` branches."""
+    return {k: jnp.zeros((), jnp.int32) for k in TELEMETRY_KEYS}
+
+
+_REGISTRY: Dict[str, type] = {}
+
+
+def register(name: str):
+    """Class decorator: register a Backend under `name`."""
+    def deco(cls):
+        _REGISTRY[name] = cls
+        return cls
+    return deco
+
+
+def names() -> Tuple[str, ...]:
+    """Registered backend names (the valid `make` / `BackendConfig.kind`
+    values)."""
+    return tuple(sorted(_REGISTRY))
+
+
+def make(name: str, **params) -> "Backend":
+    """Construct a backend by registered name. Unknown names (and unknown
+    params, via the dataclass constructor) are rejected HERE, at
+    construction time — never inside a jitted trace."""
+    if name not in _REGISTRY:
+        raise ValueError(
+            f"unknown backend {name!r}; registered: {list(names())}")
+    return _REGISTRY[name](**params)
+
+
+@dataclasses.dataclass(frozen=True)
+class Backend:
+    """Base of the stateful backend protocol. Subclasses override `step`
+    (and `init` when they carry state). See the module docstring for the
+    contract; `docs/backends.md` for the long form."""
+
+    def init(self, geom) -> Dict[str, jax.Array]:
+        """Fresh backend state for `geom.n_sbs` superblocks. Stateless
+        backends carry the empty pytree."""
+        return {}
+
+    def step(self, geom, bstate: Dict, stats: Dict[str, jax.Array],
+             tier: jax.Array, evict: jax.Array, signals: Dict
+             ) -> Tuple[Dict, jax.Array, jax.Array, Dict[str, jax.Array]]:
+        raise NotImplementedError
+
+    def _resident(self, stats, tier) -> jax.Array:
+        return (stats["occupancy"] > 0) & (tier == pl.HBM)
+
+    def _target_sbs(self, geom, target_bytes: int) -> int:
+        return max(target_bytes, 0) // geom.sb_bytes  # static
+
+
+# ---------------------------------------------------------------------------
+# shared victim/candidate selection
+# ---------------------------------------------------------------------------
+def _take_k(victim_priority: jax.Array, k: jax.Array,
+            min_prio: int = 0) -> jax.Array:
+    """Boolean mask of the `k` highest-priority entries with priority >
+    `min_prio`. Fixed-shape: a full (stable) sort, ties broken by index
+    order — identical selection to the pre-registry `_demote_k`."""
+    n = victim_priority.shape[0]
     order = jnp.argsort(-victim_priority)
     ranked_prio = victim_priority[order]
-    take = (jnp.arange(n) < k) & (ranked_prio > 0)
-    chosen = jnp.zeros((n,), jnp.bool_).at[order].set(take)
+    take = (jnp.arange(n) < k) & (ranked_prio > min_prio)
+    return jnp.zeros((n,), jnp.bool_).at[order].set(take)
+
+
+def _demote(tier: jax.Array, evict: jax.Array, chosen: jax.Array
+            ) -> Tuple[jax.Array, jax.Array]:
     tier = jnp.where(chosen, pl.HOST, tier).astype(jnp.int8)
     evict = jnp.where(chosen, pl.PAGED_OUT, evict).astype(jnp.int8)
     return tier, evict
 
 
-def step(cfg: BackendConfig, pool_cfg: pl.PoolConfig,
-         stats: Dict[str, jax.Array], tier: jax.Array, evict: jax.Array,
-         proactive_ok: jax.Array) -> Tuple[jax.Array, jax.Array]:
-    """One backend pass over superblock summaries -> new (tier, evict).
+def _promote(tier: jax.Array, evict: jax.Array, chosen: jax.Array
+             ) -> Tuple[jax.Array, jax.Array]:
+    tier = jnp.where(chosen, pl.HBM, tier).astype(jnp.int8)
+    evict = jnp.where(chosen, pl.NORMAL, evict).astype(jnp.int8)
+    return tier, evict
 
-    `stats` comes from pool.superblock_stats — page-level info only.
-    """
-    occ = stats["occupancy"]
-    ref = stats["referenced"]
-    resident = (occ > 0) & (tier == pl.HBM)
 
-    if cfg.kind == "null":
-        return tier, evict
+def _telemetry(demoted=None, promoted=None) -> Dict[str, jax.Array]:
+    t = zero_telemetry()
+    if demoted is not None:
+        t["be_demoted"] = jnp.sum(demoted).astype(jnp.int32)
+    if promoted is not None:
+        t["be_promoted"] = jnp.sum(promoted).astype(jnp.int32)
+    return t
 
-    if cfg.kind == "proactive":
-        # Demote every MADV_COLD candidate once MIAD says it's safe.
-        do = resident & (evict == pl.CANDIDATE) & proactive_ok
-        tier = jnp.where(do, pl.HOST, tier).astype(jnp.int8)
-        evict = jnp.where(do, pl.PAGED_OUT, evict).astype(jnp.int8)
-        return tier, evict
 
-    # pressure-driven backends: how many superblocks over target?
-    target_sbs = max(cfg.hbm_target_bytes, 0) // pool_cfg.sb_bytes  # static
-    k = jnp.maximum(jnp.sum(resident).astype(jnp.int32) - target_sbs, 0)
+# ---------------------------------------------------------------------------
+# the four ported backends (bit-identical to the pre-registry `step`)
+# ---------------------------------------------------------------------------
+@register("null")
+@dataclasses.dataclass(frozen=True)
+class NullBackend(Backend):
+    """Performance-first baseline: never reclaims."""
 
-    if cfg.kind == "reactive":
-        # kswapd-like victim priority: candidates (3) > unreferenced (2)
-        # > referenced (1); empty/host-resident excluded (0).
+    def step(self, geom, bstate, stats, tier, evict, signals):
+        return bstate, tier, evict, zero_telemetry()
+
+
+@register("proactive")
+@dataclasses.dataclass(frozen=True)
+class ProactiveBackend(Backend):
+    """MADV_PAGEOUT analog: demote every MADV_COLD candidate once MIAD
+    says it's safe (`signals["proactive_ok"]`)."""
+
+    def step(self, geom, bstate, stats, tier, evict, signals):
+        do = self._resident(stats, tier) & (evict == pl.CANDIDATE) \
+            & signals["proactive_ok"]
+        tier, evict = _demote(tier, evict, do)
+        return bstate, tier, evict, _telemetry(demoted=do)
+
+
+@register("reactive")
+@dataclasses.dataclass(frozen=True)
+class ReactiveBackend(Backend):
+    """kswapd analog. Victim priority under pressure: MADV_COLD
+    candidates (3) > unreferenced (2) > referenced (1); empty or
+    host-resident excluded. `evict_referenced=False` is the strict
+    kswapd reading (the referenced working set is a hard memory ceiling
+    — the simulator's historical behavior); True lets pressure persist
+    into the active list (the framework default)."""
+    hbm_target_bytes: int = 0       # pressure target
+    evict_referenced: bool = True
+
+    def step(self, geom, bstate, stats, tier, evict, signals):
+        resident = self._resident(stats, tier)
+        k = jnp.maximum(
+            jnp.sum(resident).astype(jnp.int32)
+            - self._target_sbs(geom, self.hbm_target_bytes), 0)
+        prio = jnp.where(resident,
+                         jnp.where(evict == pl.CANDIDATE, 3,
+                                   jnp.where(~stats["referenced"], 2, 1)),
+                         0)
+        chosen = _take_k(prio, k,
+                         min_prio=0 if self.evict_referenced else 1)
+        tier, evict = _demote(tier, evict, chosen)
+        return bstate, tier, evict, _telemetry(demoted=chosen)
+
+
+@register("cap")
+@dataclasses.dataclass(frozen=True)
+class CapBackend(Backend):
+    """cgroup cap: page-granular and hotness-blind — evicts resident
+    superblocks in (reverse-priority = forward address) order regardless
+    of referenced bits. On a fragmented address space this hits hot
+    objects."""
+    hbm_target_bytes: int = 0
+
+    def step(self, geom, bstate, stats, tier, evict, signals):
+        resident = self._resident(stats, tier)
+        k = jnp.maximum(
+            jnp.sum(resident).astype(jnp.int32)
+            - self._target_sbs(geom, self.hbm_target_bytes), 0)
+        n = tier.shape[0]
+        prio = jnp.where(resident, n - jnp.arange(n), 0)
+        chosen = _take_k(prio, k)
+        tier, evict = _demote(tier, evict, chosen)
+        return bstate, tier, evict, _telemetry(demoted=chosen)
+
+
+# ---------------------------------------------------------------------------
+# the stateful backends
+# ---------------------------------------------------------------------------
+@register("mglru")
+@dataclasses.dataclass(frozen=True)
+class MglruBackend(Backend):
+    """Multi-generational LRU (MGLRU-style). Carried state: one
+    generation counter per superblock. Each window, referenced resident
+    superblocks join the youngest generation (0); idle resident ones age
+    by one (saturating at `max_gen`); non-resident ones keep their
+    generation (a fault-in is followed by a reference, which rejuvenates
+    them next window). Under pressure, victims come from the OLDEST
+    generation first; generations below `min_evict_gen` are protected
+    (the just-referenced working set is never demoted)."""
+    hbm_target_bytes: int = 0
+    max_gen: int = 3
+    min_evict_gen: int = 1
+
+    def init(self, geom):
+        return {"gen": jnp.zeros((geom.n_sbs,), jnp.int32)}
+
+    def step(self, geom, bstate, stats, tier, evict, signals):
+        resident = self._resident(stats, tier)
+        gen = jnp.where(
+            resident & stats["referenced"], 0,
+            jnp.where(resident, jnp.minimum(bstate["gen"] + 1,
+                                            self.max_gen),
+                      bstate["gen"]))
+        k = jnp.maximum(
+            jnp.sum(resident).astype(jnp.int32)
+            - self._target_sbs(geom, self.hbm_target_bytes), 0)
+        # oldest generation first; gens < min_evict_gen excluded. The +1
+        # keeps gen 0 selectable when min_evict_gen=0 (priority 0 means
+        # "excluded" in _take_k) without changing the eviction order.
+        prio = jnp.where(resident & (gen >= self.min_evict_gen),
+                         gen + 1, 0)
+        chosen = _take_k(prio, k)
+        tier, evict = _demote(tier, evict, chosen)
+        return ({"gen": gen}, tier, evict, _telemetry(demoted=chosen))
+
+
+@register("promote")
+@dataclasses.dataclass(frozen=True)
+class PromoteBackend(Backend):
+    """Watermark promotion (TPP/AutoNUMA-like). Carried state: a
+    per-superblock count of consecutive referenced-while-on-HOST windows
+    (references to HOST superblocks come from stores — loads fault the
+    superblock back immediately) and the promotion hysteresis flag.
+
+    Promotion: HOST superblocks referenced for >= `promote_after`
+    consecutive windows re-tier to HBM, hottest (longest streak) first,
+    never past the high watermark. Hysteresis: promotion latches off
+    once the residency a step leaves behind touches the high watermark,
+    and re-arms only when residency dips to the low watermark — the
+    anti-ping-pong rule. Demotion:
+    when residency exceeds the high watermark, superblocks are reclaimed
+    kswapd-style (candidates > unreferenced > referenced) down to the
+    LOW watermark — like kswapd, which reclaims past its wake-up point,
+    leaving the [low, high] band as promotion headroom so the hottest
+    demoted data re-tiers instead of the whole burst bouncing back.
+
+    `hbm_high_bytes=0` means "no cap" (the whole pool); `hbm_low_bytes=0`
+    collapses the hysteresis band (low = high)."""
+    hbm_high_bytes: int = 0
+    hbm_low_bytes: int = 0
+    promote_after: int = 2
+
+    def _watermarks(self, geom) -> Tuple[int, int]:
+        high = self._target_sbs(geom, self.hbm_high_bytes) \
+            if self.hbm_high_bytes > 0 else geom.n_sbs
+        low = self._target_sbs(geom, self.hbm_low_bytes) \
+            if self.hbm_low_bytes > 0 else high
+        return high, min(low, high)
+
+    def init(self, geom):
+        return {"host_refs": jnp.zeros((geom.n_sbs,), jnp.int32),
+                "active": jnp.ones((), jnp.bool_)}
+
+    def step(self, geom, bstate, stats, tier, evict, signals):
+        high, low = self._watermarks(geom)
+        occupied = stats["occupancy"] > 0
+        ref = stats["referenced"]
+        host_res = occupied & (tier == pl.HOST)
+        n_res = jnp.sum(occupied & (tier == pl.HBM)).astype(jnp.int32)
+
+        # referenced-on-HOST streaks (reset on idle / fault-in / promote)
+        refs = jnp.where(host_res & ref, bstate["host_refs"] + 1, 0)
+
+        # hysteresis arm: held from the previous window, or re-armed the
+        # moment residency dips to the low watermark
+        armed = bstate["active"] | (n_res <= low)
+
+        # promote hottest qualifying HOST sbs, never past high
+        k_up = jnp.where(armed, jnp.maximum(high - n_res, 0), 0)
+        up = _take_k(jnp.where(host_res & (refs >= self.promote_after),
+                               refs, 0), k_up)
+        tier, evict = _promote(tier, evict, up)
+        refs = jnp.where(up, 0, refs)
+
+        # above high: reclaim down to LOW (kswapd priorities; past the
+        # trigger point, so the band stays open for promotion)
+        resident = occupied & (tier == pl.HBM)
+        n_res2 = jnp.sum(resident).astype(jnp.int32)
+        k_down = jnp.where(n_res2 > high, n_res2 - low, 0)
         prio = jnp.where(resident,
                          jnp.where(evict == pl.CANDIDATE, 3,
                                    jnp.where(~ref, 2, 1)), 0)
-        return _demote_k(tier, evict, prio, k)
+        down = _take_k(prio, k_down)
+        tier, evict = _demote(tier, evict, down)
 
-    if cfg.kind == "cap":
-        # cgroup cap: page-granular and hotness-blind — evicts resident
-        # superblocks in (reverse) address order regardless of referenced
-        # bits. On a fragmented address space this hits hot objects.
-        n = tier.shape[0]
-        prio = jnp.where(resident, n - jnp.arange(n), 0)
-        return _demote_k(tier, evict, prio, k)
+        # latch off once the residency we LEAVE behind touches high —
+        # promotion stays off until the next low-watermark dip
+        r_final = jnp.sum(occupied & (tier == pl.HBM)).astype(jnp.int32)
+        active = armed & (r_final < high)
 
-    raise ValueError(cfg.kind)
+        bstate = {"host_refs": refs, "active": active}
+        return bstate, tier, evict, _telemetry(demoted=down, promoted=up)
+
+
+# ---------------------------------------------------------------------------
+# deprecated shims (pre-registry API)
+# ---------------------------------------------------------------------------
+def pressure_params(name: str, target_bytes: int) -> Dict[str, int]:
+    """Map a generic pressure target onto whichever pressure field the
+    registered backend declares (reactive/cap/mglru: hbm_target_bytes;
+    promote: hbm_high_bytes; none for null/proactive). The ONE place
+    that knows this mapping — launchers, the BackendConfig shim and the
+    SimHeap adapter all route through it, so a new backend only has to
+    name its field to pick the target up everywhere."""
+    if name not in _REGISTRY:
+        raise ValueError(
+            f"unknown backend {name!r}; registered: {list(names())}")
+    if not target_bytes:
+        return {}
+    fields = {f.name for f in dataclasses.fields(_REGISTRY[name])}
+    for field in ("hbm_target_bytes", "hbm_high_bytes"):
+        if field in fields:
+            return {field: target_bytes}
+    return {}
+
+
+@dataclasses.dataclass(frozen=True)
+class BackendConfig:
+    """DEPRECATED shim for the pre-registry string-keyed config. Use
+    `backend.make(name, **params)` instead. Kept so existing configs and
+    checkpointer metadata keep loading; `kind` is validated against the
+    registry at construction time (a typo like "reactve" fails here, not
+    deep inside a jitted trace)."""
+    kind: str = "reactive"          # any name in backend.names()
+    hbm_target_bytes: int = 0       # pressure target (reactive/cap/mglru)
+
+    def __post_init__(self):
+        if self.kind not in _REGISTRY:
+            raise ValueError(
+                f"unknown backend kind {self.kind!r}; "
+                f"registered: {list(names())}")
+
+    def build(self) -> Backend:
+        """The equivalent registry backend, pressure target mapped via
+        `pressure_params`."""
+        return make(self.kind,
+                    **pressure_params(self.kind, self.hbm_target_bytes))
+
+
+def as_backend(obj) -> Backend:
+    """Normalize a Backend | BackendConfig | name string to a Backend."""
+    if isinstance(obj, Backend):
+        return obj
+    if isinstance(obj, BackendConfig):
+        return obj.build()
+    if isinstance(obj, str):
+        return make(obj)
+    raise TypeError(f"not a backend: {obj!r}")
+
+
+def step(cfg, pool_cfg: pl.PoolConfig, stats: Dict[str, jax.Array],
+         tier: jax.Array, evict: jax.Array, proactive_ok: jax.Array
+         ) -> Tuple[jax.Array, jax.Array]:
+    """DEPRECATED shim for the pre-registry stateless entry point.
+    Runs one protocol step with fresh state and drops the carried state
+    and telemetry — stateless backends are unaffected; stateful ones
+    need the real protocol (`Engine` threads bstate automatically)."""
+    b = as_backend(cfg)
+    _, tier, evict, _ = b.step(pool_cfg, b.init(pool_cfg), stats, tier,
+                               evict, {"proactive_ok": proactive_ok,
+                                       "epoch": jnp.zeros((), jnp.int32)})
+    return tier, evict

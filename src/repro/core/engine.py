@@ -33,7 +33,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -53,8 +53,10 @@ class EngineOptions:
     over by the jitted window program). Field-compatible with the old
     `HadesOptions` — frontend.py aliases it."""
     collect_every: int = 8
-    backend: be.BackendConfig = dataclasses.field(
-        default_factory=be.BackendConfig)
+    # a backend.Backend (from backend.make), a deprecated BackendConfig,
+    # or a registered name — normalized via backend.as_backend
+    backend: Union[be.Backend, be.BackendConfig, str] = dataclasses.field(
+        default_factory=lambda: be.make("reactive"))
     collector: col.CollectorConfig = dataclasses.field(
         default_factory=col.CollectorConfig)
     enabled: bool = True           # False = allocator-only (no tidying)
@@ -72,7 +74,7 @@ def zero_report() -> Dict[str, jax.Array]:
     so `lax.cond` branches agree."""
     i32 = functools.partial(jnp.zeros, (), jnp.int32)
     f32 = functools.partial(jnp.zeros, (), jnp.float32)
-    return {
+    report = {
         "moved_to_hot": i32(), "moved_to_cold": i32(),
         "skipped_atc": i32(),
         "promotion_rate": f32(),
@@ -82,20 +84,28 @@ def zero_report() -> Dict[str, jax.Array]:
         "rss_bytes": f32(), "host_bytes": f32(),
         "did_collect": jnp.zeros((), jnp.bool_),
     }
+    report.update(be.zero_telemetry())
+    return report
 
 
 def collect_and_backend(pool_cfg: pl.PoolConfig, col_cfg: col.CollectorConfig,
-                        be_cfg: be.BackendConfig, state: Dict
+                        backend: be.Backend, state: Dict
                         ) -> Tuple[Dict, Dict[str, jax.Array]]:
     """Collector pass + backend step as one fused transition. The backend
     sees the closing window's superblock stats (pre-clear), exactly as the
-    old two-dispatch Hades.collect did; RSS/host byte gauges are computed
-    on-device so callers never sync mid-window."""
+    old two-dispatch Hades.collect did, plus its own carried state
+    (`state["bstate"]`, threaded through the scan carry so stateful
+    backends run inside the single-dispatch window); RSS/host byte gauges
+    are computed on-device so callers never sync mid-window."""
     state, report = col.collect(pool_cfg, col_cfg, state)
     stats = report.pop("sb_stats")
-    tier, evict = be.step(be_cfg, pool_cfg, stats, state["sb_tier"],
-                          state["sb_evict"], report["proactive_ok"])
-    state = dict(state, sb_tier=tier, sb_evict=evict)
+    signals = {"proactive_ok": report["proactive_ok"],
+               "epoch": state["epoch"]}
+    bstate, tier, evict, telemetry = backend.step(
+        pool_cfg, state["bstate"], stats, state["sb_tier"],
+        state["sb_evict"], signals)
+    state = dict(state, bstate=bstate, sb_tier=tier, sb_evict=evict)
+    report.update(telemetry)
     occupied = stats["occupancy"] > 0
     sb_bytes = float(pool_cfg.sb_bytes)
     report["rss_bytes"] = jnp.sum(
@@ -111,7 +121,7 @@ def collect_and_backend(pool_cfg: pl.PoolConfig, col_cfg: col.CollectorConfig,
 # the host knows the deterministic window clock, so no device cond needed)
 # ---------------------------------------------------------------------------
 def apply_step(pool_cfg: pl.PoolConfig, col_cfg: col.CollectorConfig,
-               be_cfg: be.BackendConfig, state: Dict, ids: jax.Array,
+               backend: be.Backend, state: Dict, ids: jax.Array,
                values: Optional[jax.Array], *, op: str,
                do_arm: bool = False, do_collect: bool = False
                ) -> Tuple[Dict, Optional[jax.Array], Dict[str, jax.Array]]:
@@ -132,7 +142,8 @@ def apply_step(pool_cfg: pl.PoolConfig, col_cfg: col.CollectorConfig,
     if do_arm:
         state = col.arm(state)
     if do_collect:
-        state, report = collect_and_backend(pool_cfg, col_cfg, be_cfg, state)
+        state, report = collect_and_backend(pool_cfg, col_cfg, backend,
+                                            state)
     else:
         report = zero_report()
     return state, out, report
@@ -275,9 +286,10 @@ def make_run_window(pool_cfg: pl.PoolConfig, opts: EngineOptions):
     `did_collect` marks window closers) so both shapes look identical to
     callers; `step0` is the op-clock value BEFORE the trace, keeping the
     cadence aligned across successive calls."""
-    col_cfg, be_cfg = opts.collector, opts.backend
+    col_cfg = opts.collector
+    backend = be.as_backend(opts.backend)
     every = int(opts.collect_every)
-    cab = functools.partial(collect_and_backend, pool_cfg, col_cfg, be_cfg)
+    cab = functools.partial(collect_and_backend, pool_cfg, col_cfg, backend)
     run_generic, run_aligned = window_program(
         functools.partial(_op_step, pool_cfg), cab, col.arm,
         every=every, enabled=opts.enabled, overlap=opts.overlap_collect)
@@ -345,17 +357,20 @@ class Engine:
                  opts: Optional[EngineOptions] = None):
         self.cfg = pool_cfg
         self.opts = opts or EngineOptions()
+        self.backend = be.as_backend(self.opts.backend)
         self._run = make_run_window(pool_cfg, self.opts)
         self._apply = jax.jit(
             functools.partial(apply_step, pool_cfg, self.opts.collector,
-                              self.opts.backend),
+                              self.backend),
             static_argnames=("op", "do_arm", "do_collect"))
         self._collect = jax.jit(functools.partial(
             collect_and_backend, pool_cfg, self.opts.collector,
-            self.opts.backend))
+            self.backend))
 
     def init(self) -> Dict:
-        return pl.init(self.cfg)
+        """Fresh pool state, with the backend's carried state seeded in
+        (`bstate` rides the window-scan carry from here on)."""
+        return dict(pl.init(self.cfg), bstate=self.backend.init(self.cfg))
 
     # -- fused path ---------------------------------------------------------
     def run_window(self, state: Dict, trace: Dict[str, jax.Array],

@@ -7,10 +7,14 @@
                           every N steps: arm -> collect (Object Collector,
                                          MIAD, MADV_COLD candidates)
                                          |
-                             superblock stats (page-level view only)
+                        superblock stats (page-level view only) + bstate
                                          v
-                                    backend.step (reactive / proactive /
-                                    cap / null — unmodified, oblivious)
+                         backend.make(name).step — any registered backend
+                         (reactive / proactive / cap / null / mglru /
+                         promote, see backend.names()), unmodified and
+                         object-oblivious; stateful backends carry their
+                         own state (`bstate`) across windows inside the
+                         scan carry (docs/backends.md)
 
 Since the fused-window refactor this class is a thin compatibility shim
 over `core/engine.py`: every op is ONE compiled dispatch (the collect +

@@ -139,6 +139,12 @@ def init(cfg: PoolConfig) -> Dict[str, jax.Array]:
         # lifetime counters
         "total_faults": jnp.zeros((), jnp.int32),
         "total_moves": jnp.zeros((), jnp.int32),
+        # tiering-backend carried state (backend.Backend protocol). Empty
+        # for stateless backends; Engine.init / kvcache.init replace it
+        # with backend.init(cfg) so stateful backends (mglru, promote)
+        # ride the fused-window scan carry. Every pool op passes it
+        # through untouched.
+        "bstate": {},
     }
 
 
@@ -305,6 +311,17 @@ def free(cfg: PoolConfig, state: Dict, obj_ids: jax.Array) -> Dict:
 # ---------------------------------------------------------------------------
 # Superblock summaries (the ONLY view backends get — object-oblivious)
 # ---------------------------------------------------------------------------
+def sb_occupancy(cfg: PoolConfig, state: Dict) -> jax.Array:
+    """Per-superblock live-slot count [n_sbs], from the slot-owner array
+    alone — no object-table gather. The cheap shared input for the
+    RSS/host gauges and the backend path (the referenced bits in
+    `superblock_stats` are the expensive part; occupancy is not)."""
+    live_slot = state["slot_owner"] >= 0
+    sb_of_slot = jnp.arange(cfg.n_slots) // cfg.sb_slots
+    return jnp.zeros((cfg.n_sbs,), jnp.int32).at[sb_of_slot].add(
+        live_slot.astype(jnp.int32))
+
+
 def superblock_stats(cfg: PoolConfig, state: Dict) -> Dict[str, jax.Array]:
     """Per-superblock: occupancy, referenced (any access bit within),
     region id, tier, evict state. This is the page-table-level view the
@@ -312,24 +329,22 @@ def superblock_stats(cfg: PoolConfig, state: Dict) -> Dict[str, jax.Array]:
     owner = state["slot_owner"]
     live_slot = owner >= 0
     sb_of_slot = jnp.arange(cfg.n_slots) // cfg.sb_slots
-    occ = jnp.zeros((cfg.n_sbs,), jnp.int32).at[sb_of_slot].add(
-        live_slot.astype(jnp.int32))
     acc_obj = ot.access_of(state["table"]) == 1
     slot_acc = live_slot & acc_obj[jnp.maximum(owner, 0)]
     ref = jnp.zeros((cfg.n_sbs,), jnp.bool_).at[sb_of_slot].max(slot_acc)
-    return {"occupancy": occ, "referenced": ref,
+    return {"occupancy": sb_occupancy(cfg, state), "referenced": ref,
             "region": cfg.sb_region_ids(),
             "tier": state["sb_tier"], "evict": state["sb_evict"]}
 
 
 def rss_bytes(cfg: PoolConfig, state: Dict) -> jax.Array:
     """Resident (HBM-tier) bytes: occupied superblocks still in HBM."""
-    stats_occ = superblock_stats(cfg, state)["occupancy"]
-    resident = (stats_occ > 0) & (state["sb_tier"] == HBM)
+    occ = sb_occupancy(cfg, state)
+    resident = (occ > 0) & (state["sb_tier"] == HBM)
     return jnp.sum(resident).astype(jnp.float32) * float(cfg.sb_bytes)
 
 
 def host_bytes(cfg: PoolConfig, state: Dict) -> jax.Array:
-    stats_occ = superblock_stats(cfg, state)["occupancy"]
-    out = (stats_occ > 0) & (state["sb_tier"] == HOST)
+    occ = sb_occupancy(cfg, state)
+    out = (occ > 0) & (state["sb_tier"] == HOST)
     return jnp.sum(out).astype(jnp.float32) * float(cfg.sb_bytes)

@@ -13,8 +13,12 @@ Semantics mirrored from HADES:
     through the object table — that is the paper's enabling insight);
   * per-object access bit / CIW / ATC words, identical state machine;
   * MIAD feedback on the COLD-heap promotion rate;
-  * page-level backends (reactive / proactive / cap / null) that see only
-    page metadata: resident, referenced, evict-candidate;
+  * page-level backends that see only page metadata: resident,
+    referenced, evict-candidate — the SAME `core.backend` registry
+    implementations the jit Engine runs (one oracle), adapted to 4 KiB
+    pages via `PageGeometry` (`backend_step` below); stateful backends
+    (mglru generations, promote watermarks) carry their state on the
+    heap across windows;
   * page faults promote pages back and cost `fault_ns` (P4800x-class);
   * huge-page promotion of dense 2 MiB runs in the HOT heap; THP-style
     bloat is visible if promotion is applied to sparse runs.
@@ -31,6 +35,9 @@ from typing import Dict, Optional, Tuple
 
 import numpy as np
 
+from repro.core import backend as be
+from repro.core import pool as pl
+
 NEW, HOT, COLD = 0, 1, 2
 PAGE = 4096
 HUGE = 2 * 1024 * 1024
@@ -41,8 +48,8 @@ ALIGN = 16
 class SimConfig:
     max_objects: int
     heap_bytes: int                 # per-heap address range
-    backend: str = "reactive"       # reactive | proactive | cap | null
-    hbm_target_bytes: int = 0       # pressure target for reactive/cap
+    backend: str = "reactive"       # any registered backend.names() entry
+    hbm_target_bytes: int = 0       # pressure target / promote watermark
     ciw_threshold: float = 3.0
     ciw_min: float = 1.0
     ciw_max: float = 16.0
@@ -81,6 +88,13 @@ class SimHeap:
         self.resident = np.zeros(self.n_pages, bool)
         self.referenced = np.zeros(self.n_pages, bool)
         self.evict = np.zeros(self.n_pages, np.int8)  # 0/1 cand/2 out
+        # shared tiering backend (core.backend registry): a 4 KiB page
+        # plays the superblock role; unknown names fail HERE, at
+        # construction. `reactive` runs in strict-kswapd mode (never
+        # evicts referenced pages — the simulator's historical ceiling).
+        self._geom = be.PageGeometry(n_sbs=self.n_pages, sb_bytes=PAGE)
+        self.backend = self._make_backend(cfg)
+        self._bstate = self.backend.init(self._geom)
         # MIAD state
         self.ciw_threshold = cfg.ciw_threshold
         self.calm_windows = 0
@@ -320,41 +334,53 @@ class SimHeap:
         self.live_bytes[heap] = end
 
     # -- backend (page-level, object-oblivious) --------------------------------
+    # The pure-python adapter onto the shared `core.backend` protocol:
+    # page metadata in, protocol stats out, backend deltas applied back.
+    # The numpy duplicate of the backend logic is GONE — simulation and
+    # production run one implementation (the repo's single oracle).
+    @staticmethod
+    def _make_backend(cfg: SimConfig) -> be.Backend:
+        params = be.pressure_params(cfg.backend, cfg.hbm_target_bytes)
+        if cfg.backend == "reactive":
+            # strict kswapd: the referenced set is a hard memory ceiling
+            # (bit-identical to the pre-protocol numpy backend)
+            params["evict_referenced"] = False
+        return be.make(cfg.backend, **params)
+
+    def page_stats(self) -> Tuple[Dict[str, np.ndarray], np.ndarray,
+                                  np.ndarray]:
+        """The backend protocol's (stats, tier, evict) view of the page
+        metadata: occupied = resident or paged out; tier HOST iff paged
+        out; referenced = the CLOSING window's bits (post-collect
+        snapshot). The parity suite replays these through the jit path."""
+        out = self.evict == 2
+        occ = (self.resident | out).astype(np.int32)
+        ref = getattr(self, "last_referenced", self.referenced)
+        region = np.full(self.n_pages, COLD, np.int8)
+        for h in (NEW, HOT):
+            lo = self.base[h] // PAGE
+            region[lo:lo + self.cfg.heap_bytes // PAGE] = h
+        tier = np.where(out, pl.HOST, pl.HBM).astype(np.int8)
+        stats = {"occupancy": occ, "referenced": ref.copy(),
+                 "region": region, "tier": tier, "evict": self.evict.copy()}
+        return stats, tier, self.evict.astype(np.int8)
+
     def backend_step(self) -> None:
-        kind = self.cfg.backend
-        if kind == "null":
-            return
-        if kind == "proactive":
-            if self.proactive_ok:
-                sel = self.resident & (self.evict == 1)
-                self.evict[sel] = 2
-                self.resident[sel] = False
-            return
-        target_pages = max(self.cfg.hbm_target_bytes, 0) // PAGE
-        n_res = int(self.resident.sum())
-        over = n_res - target_pages
-        if over <= 0:
-            return
-        referenced = getattr(self, "last_referenced", self.referenced)
-        if kind == "reactive":
-            # kswapd: evict candidates first, then unreferenced, then stop
-            # (never evicts referenced pages — that is its memory ceiling)
-            for sel in (self.resident & (self.evict == 1),
-                        self.resident & ~referenced):
-                idx = np.nonzero(sel)[0][:over]
-                self.evict[idx] = 2
-                self.resident[idx] = False
-                over -= len(idx)
-                if over <= 0:
-                    return
-        elif kind == "cap":
-            # cgroup cap: hotness-blind, evicts in address order until
-            # under target — hits pages with hot objects on them.
-            idx = np.nonzero(self.resident)[0][:over]
-            self.evict[idx] = 2
-            self.resident[idx] = False
-        else:
-            raise ValueError(kind)
+        stats, tier, evict = self.page_stats()
+        signals = {"proactive_ok": np.bool_(self.proactive_ok),
+                   "epoch": np.int32(self.epoch)}
+        self._bstate, tier2, evict2, _ = self.backend.step(
+            self._geom, self._bstate, stats, tier, evict, signals)
+        tier2 = np.asarray(tier2)
+        # apply the backend's outputs verbatim: the full evict column
+        # (so a backend that marks/clears evict state without re-tiering
+        # still round-trips through the adapter) + residency from the
+        # tier deltas
+        self.evict = np.asarray(evict2).astype(np.int8).copy()
+        demoted = (tier == pl.HBM) & (tier2 == pl.HOST)   # paged out
+        promoted = (tier == pl.HOST) & (tier2 == pl.HBM)  # re-tiered in
+        self.resident[demoted] = False
+        self.resident[promoted] = True
 
     # -- metrics ----------------------------------------------------------------
     def promotion_rate(self) -> float:

@@ -11,6 +11,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
+from repro.core import backend as be
 from repro.models.model import Model
 from repro.runtime.server import Server, ServerConfig
 
@@ -23,16 +24,26 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=32)
     ap.add_argument("--max-len", type=int, default=128)
-    ap.add_argument("--backend", default="proactive")
+    ap.add_argument("--backend", default="proactive", choices=be.names(),
+                    help="tiering backend (backend registry)")
+    ap.add_argument("--hbm-target-mb", type=int, default=0,
+                    help="pressure target / promote high watermark for "
+                         "the reactive/cap/mglru/promote backends")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+
+    be_params = be.pressure_params(args.backend, args.hbm_target_mb << 20)
+    if args.hbm_target_mb and not be_params:
+        ap.error(f"--hbm-target-mb is not applicable to {args.backend!r}"
+                 " (it declares no pressure field)")
 
     cfg = get_config(args.arch, reduced=args.reduced)
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(args.seed))
     srv = Server(model, ServerConfig(
         batch=args.requests, max_len=args.max_len,
-        block_tokens=max(args.max_len // 16, 4), backend=args.backend))
+        block_tokens=max(args.max_len // 16, 4), backend=args.backend,
+        backend_params=be_params))
 
     rng = np.random.default_rng(args.seed)
     prompts = jnp.asarray(

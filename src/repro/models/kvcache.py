@@ -65,9 +65,17 @@ class KVCacheConfig:
             dtype=self.dtype)
 
 
-def init(cfg: KVCacheConfig) -> Dict:
+def init(cfg: KVCacheConfig,
+         backend: Optional[be.Backend] = None) -> Dict:
+    """Fresh serving state. Pass the tiering backend so its carried
+    state (`pool["bstate"]`) is seeded for the fused collect+backend
+    path; omit it only when no backend will run (stateless backends
+    tolerate the default empty carry)."""
+    pool = pl.init(cfg.pool_config())
+    if backend is not None:
+        pool = dict(pool, bstate=backend.init(cfg.pool_config()))
     return {
-        "pool": pl.init(cfg.pool_config()),
+        "pool": pool,
         # logical block table: -1 = unallocated
         "block_tables": jnp.full(
             (cfg.num_layers, cfg.batch, cfg.max_blocks), -1, jnp.int32),
@@ -225,13 +233,15 @@ def collect(cfg: KVCacheConfig, state: Dict,
 
 
 def collect_and_backend(cfg: KVCacheConfig, col_cfg: col.CollectorConfig,
-                        be_cfg: be.BackendConfig, state: Dict
+                        backend: be.Backend, state: Dict
                         ) -> Tuple[Dict, Dict]:
     """Collector + backend over the KV pool as ONE fused transition (the
     engine's serving-window path) — replaces the old collect-dispatch /
-    stats-pop / backend-dispatch sequence in the server loop."""
+    stats-pop / backend-dispatch sequence in the server loop. The
+    backend's carried state rides `state["pool"]["bstate"]` through the
+    decode-window scan (seed it via `init(cfg, backend=...)`)."""
     pool, report = eng.collect_and_backend(cfg.pool_config(), col_cfg,
-                                           be_cfg, state["pool"])
+                                           backend, state["pool"])
     return dict(state, pool=pool), report
 
 

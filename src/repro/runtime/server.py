@@ -48,7 +48,11 @@ class ServerConfig:
     max_len: int = 256
     block_tokens: int = 16
     collect_every: int = 8
+    # tiering backend: any registered name (backend.names()) + its
+    # constructor params, built via backend.make at Server construction
+    # (typos fail here, not inside a jitted trace)
     backend: str = "proactive"
+    backend_params: Optional[Dict] = None
     eos_token: int = 2
     # decode-window length W used by `generate` (0 -> collect_every):
     # W steps run as ONE dispatch, window protocol included
@@ -76,8 +80,8 @@ class Server:
             block_tokens=cfg.block_tokens, num_kv_heads=mc.num_kv_heads,
             head_dim=mc.resolved_head_dim, dtype=mc.dtype)
         self.col_cfg = col.CollectorConfig(use_pallas=cfg.use_pallas)
-        self.be_cfg = be.BackendConfig(kind=cfg.backend)
-        self.state = kvc.init(self.kv_cfg)
+        self.backend = be.make(cfg.backend, **(cfg.backend_params or {}))
+        self.state = kvc.init(self.kv_cfg, backend=self.backend)
         self._steps = 0                     # host mirror of the op clock
         self._last_tok = jnp.zeros((cfg.batch,), jnp.int32)
         self.reports: List[Dict] = []
@@ -124,7 +128,7 @@ class Server:
         every = int(self.cfg.collect_every)
         overlap = bool(self.cfg.overlap_collect)
         cab = functools.partial(kvc.collect_and_backend, self.kv_cfg,
-                                self.col_cfg, self.be_cfg)
+                                self.col_cfg, self.backend)
 
         def win_step(params, carry, forced):
             """One window step: forced token (>= 0) or self-feed the
@@ -270,7 +274,7 @@ class Server:
         """Fresh serving state (empty pool, zeroed clock/reports) without
         dropping the compiled programs — shapes are geometry-only, so
         benchmarks and multi-request drivers restart instantly."""
-        self.state = kvc.init(self.kv_cfg)
+        self.state = kvc.init(self.kv_cfg, backend=self.backend)
         self._steps = 0
         self._last_tok = jnp.zeros((self.cfg.batch,), jnp.int32)
         self.reports = []

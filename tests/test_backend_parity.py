@@ -1,0 +1,227 @@
+"""Backend one-oracle parity.
+
+1. Trace-driven suite: every registered backend, run under `jax.jit`
+   with its carried state threaded through a `lax.scan` (exactly how the
+   Engine runs it inside the fused window), must match the SimHeap page
+   adapter (the same implementation, eager with numpy inputs) on shared
+   traces — pressure, calm, and fragmented-address-space scenarios.
+2. Synthetic-stats suite: multi-window jit-scan vs eager parity on
+   randomized superblock stats (covers the promote promotion path,
+   which the simulator can't reach — loads fault HOST pages back in).
+3. Bit-parity of the four ported backends against the pre-refactor
+   `backend.step` logic (reimplemented here verbatim as the reference).
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import backend as be
+from repro.core import pool as pl
+from repro.core.simheap import PAGE, SimConfig, SimHeap
+
+ALL_BACKENDS = ("reactive", "proactive", "cap", "null", "mglru", "promote")
+
+
+# ---------------------------------------------------------------------------
+# 1. shared SimHeap traces, replayed through the jitted scan
+# ---------------------------------------------------------------------------
+def _drive(h: SimHeap, scenario: str, seed: int = 0):
+    """Run a scenario, recording the backend protocol inputs/outputs at
+    every window. Returns (trace dict of stacked inputs, list of
+    post-step (tier, evict))."""
+    rng = np.random.default_rng(seed)
+    n = 160
+    h.alloc(np.arange(n), rng.integers(64, 2048, n))
+    ins, outs = [], []
+    for w in range(8):
+        if scenario == "pressure":
+            hot = rng.integers(0, n // 8, 24)          # tiny hot set
+        elif scenario == "calm":
+            hot = rng.integers(0, n, 96)               # touch most
+        else:                                          # fragmented
+            hot = (rng.integers(0, n // 2, 24) * 2) % n  # scattered
+            if w == 2:                                 # punch holes
+                dead = [i for i in range(1, n, 3) if h.heap[i] >= 0]
+                h.free(np.asarray(dead))
+        live = hot[h.heap[hot] >= 0]
+        if len(live):
+            h.access_objects(live)
+        h.arm()
+        h.collect()
+        stats, tier, evict = h.page_stats()
+        ins.append({"stats": stats, "tier": tier, "evict": evict,
+                    "ok": np.bool_(h.proactive_ok),
+                    "epoch": np.int32(h.epoch)})
+        h.backend_step()
+        post_tier = np.where(h.evict == 2, pl.HOST, pl.HBM).astype(np.int8)
+        outs.append((post_tier, h.evict.copy()))
+    trace = jax.tree.map(lambda *xs: jnp.asarray(np.stack(xs)), *ins)
+    return trace, outs
+
+
+def _replay_jit(backend: be.Backend, geom, trace):
+    """The Engine's execution shape: one jitted lax.scan, bstate in the
+    carry."""
+    def body(bstate, xs):
+        bstate, tier, evict, telem = backend.step(
+            geom, bstate, xs["stats"], xs["tier"], xs["evict"],
+            {"proactive_ok": xs["ok"], "epoch": xs["epoch"]})
+        return bstate, {"tier": tier, "evict": evict}
+
+    @jax.jit
+    def run(trace):
+        return jax.lax.scan(body, backend.init(geom), trace)
+
+    _, ys = run(trace)
+    return np.asarray(ys["tier"]), np.asarray(ys["evict"])
+
+
+@pytest.mark.parametrize("scenario", ["pressure", "calm", "fragmented"])
+@pytest.mark.parametrize("name", ALL_BACKENDS)
+def test_jit_backend_matches_simheap_oracle(name, scenario):
+    """jit scan-carried execution == the SimHeap adapter's eager run on
+    the same trace, for every registered backend. The demotion/promotion
+    deltas the simulator applies to its page metadata must be exactly
+    the (tier, evict) columns the jitted backend emits."""
+    cfg = SimConfig(max_objects=512, heap_bytes=1 << 19, backend=name,
+                    hbm_target_bytes=1 << 16 if scenario == "pressure"
+                    else 1 << 18)
+    h = SimHeap(cfg, seed=0)
+    trace, sim_outs = _drive(h, scenario)
+    geom = be.PageGeometry(n_sbs=h.n_pages, sb_bytes=PAGE)
+    jit_tier, jit_evict = _replay_jit(h._make_backend(cfg), geom, trace)
+    for w, (sim_tier, sim_evict) in enumerate(sim_outs):
+        assert np.array_equal(jit_tier[w], sim_tier), \
+            f"{name}/{scenario}: tier diverged at window {w}"
+        assert np.array_equal(jit_evict[w], sim_evict), \
+            f"{name}/{scenario}: evict diverged at window {w}"
+
+
+# ---------------------------------------------------------------------------
+# 2. synthetic stats: jit-scan vs eager, promotion path included
+# ---------------------------------------------------------------------------
+def _random_stats_trace(rng, n_sbs, t):
+    return {
+        "stats": {
+            "occupancy": jnp.asarray(
+                rng.integers(0, 4, (t, n_sbs)), jnp.int32),
+            "referenced": jnp.asarray(rng.random((t, n_sbs)) < 0.5),
+            "region": jnp.asarray(
+                rng.integers(0, 3, (t, n_sbs)), jnp.int8),
+            "tier": jnp.zeros((t, n_sbs), jnp.int8),
+            "evict": jnp.zeros((t, n_sbs), jnp.int8),
+        },
+        "tier": jnp.asarray(rng.integers(0, 2, (t, n_sbs)), jnp.int8),
+        "evict": jnp.asarray(rng.integers(0, 3, (t, n_sbs)), jnp.int8),
+        "ok": jnp.asarray(rng.random(t) < 0.5),
+        "epoch": jnp.arange(t, dtype=jnp.int32),
+    }
+
+
+@pytest.mark.parametrize("name,params", [
+    ("mglru", dict(hbm_target_bytes=6 * 4096)),
+    ("promote", dict(hbm_high_bytes=10 * 4096, hbm_low_bytes=5 * 4096,
+                     promote_after=2)),
+    ("reactive", dict(hbm_target_bytes=6 * 4096)),
+    ("proactive", {}),
+])
+def test_jit_scan_matches_eager_on_synthetic_stats(name, params):
+    """Stateful carry under jit == the eager python loop, on stats rich
+    enough to hit every branch (referenced HOST superblocks exercise
+    promote's promotion + hysteresis)."""
+    n_sbs, t = 16, 10
+    geom = be.PageGeometry(n_sbs=n_sbs, sb_bytes=4096)
+    backend = be.make(name, **params)
+    trace = _random_stats_trace(np.random.default_rng(7), n_sbs, t)
+
+    jit_tier, jit_evict = _replay_jit(backend, geom, trace)
+
+    bstate = backend.init(geom)
+    promoted_any = 0
+    for w in range(t):
+        xs = jax.tree.map(lambda v: v[w], trace)
+        bstate, tier, evict, telem = backend.step(
+            geom, bstate, xs["stats"], xs["tier"], xs["evict"],
+            {"proactive_ok": xs["ok"], "epoch": xs["epoch"]})
+        promoted_any += int(telem["be_promoted"])
+        assert np.array_equal(np.asarray(tier), jit_tier[w]), (name, w)
+        assert np.array_equal(np.asarray(evict), jit_evict[w]), (name, w)
+    if name == "promote":
+        assert promoted_any > 0, "synthetic trace never promoted"
+
+
+# ---------------------------------------------------------------------------
+# 3. the four ported backends vs the pre-refactor implementation
+# ---------------------------------------------------------------------------
+def _legacy_demote_k(tier, evict, victim_priority, k):
+    """Verbatim pre-refactor `_demote_k` (the recorded reference)."""
+    n = tier.shape[0]
+    order = jnp.argsort(-victim_priority)
+    ranked_prio = victim_priority[order]
+    take = (jnp.arange(n) < k) & (ranked_prio > 0)
+    chosen = jnp.zeros((n,), jnp.bool_).at[order].set(take)
+    tier = jnp.where(chosen, pl.HOST, tier).astype(jnp.int8)
+    evict = jnp.where(chosen, pl.PAGED_OUT, evict).astype(jnp.int8)
+    return tier, evict
+
+
+def _legacy_step(kind, hbm_target_bytes, pool_cfg, stats, tier, evict,
+                 proactive_ok):
+    """Verbatim pre-refactor `backend.step` (the recorded reference)."""
+    occ = stats["occupancy"]
+    ref = stats["referenced"]
+    resident = (occ > 0) & (tier == pl.HBM)
+    if kind == "null":
+        return tier, evict
+    if kind == "proactive":
+        do = resident & (evict == pl.CANDIDATE) & proactive_ok
+        tier = jnp.where(do, pl.HOST, tier).astype(jnp.int8)
+        evict = jnp.where(do, pl.PAGED_OUT, evict).astype(jnp.int8)
+        return tier, evict
+    target_sbs = max(hbm_target_bytes, 0) // pool_cfg.sb_bytes
+    k = jnp.maximum(jnp.sum(resident).astype(jnp.int32) - target_sbs, 0)
+    if kind == "reactive":
+        prio = jnp.where(resident,
+                         jnp.where(evict == pl.CANDIDATE, 3,
+                                   jnp.where(~ref, 2, 1)), 0)
+        return _legacy_demote_k(tier, evict, prio, k)
+    if kind == "cap":
+        n = tier.shape[0]
+        prio = jnp.where(resident, n - jnp.arange(n), 0)
+        return _legacy_demote_k(tier, evict, prio, k)
+    raise ValueError(kind)
+
+
+PCFG = pl.make_config(max_objects=256, slot_words=4, sb_slots=8, slack=1.0)
+
+
+@pytest.mark.parametrize("kind", ["reactive", "proactive", "cap", "null"])
+def test_ported_backends_bit_identical_to_prerefactor(kind):
+    rng = np.random.default_rng(11)
+    n = PCFG.n_sbs
+    for trial in range(20):
+        target = int(rng.integers(0, n + 4)) * PCFG.sb_bytes
+        stats = {
+            "occupancy": jnp.asarray(rng.integers(0, 3, n), jnp.int32),
+            "referenced": jnp.asarray(rng.random(n) < 0.5),
+            "region": jnp.asarray(rng.integers(0, 3, n), jnp.int8),
+            "tier": jnp.zeros((n,), jnp.int8),
+            "evict": jnp.zeros((n,), jnp.int8),
+        }
+        tier = jnp.asarray(rng.integers(0, 2, n), jnp.int8)
+        evict = jnp.asarray(rng.integers(0, 3, n), jnp.int8)
+        ok = jnp.asarray(bool(rng.integers(0, 2)))
+
+        want_t, want_e = _legacy_step(kind, target, PCFG, stats, tier,
+                                      evict, ok)
+        backend = be.BackendConfig(kind=kind,
+                                   hbm_target_bytes=target).build()
+        _, got_t, got_e, _ = backend.step(
+            PCFG, backend.init(PCFG), stats, tier, evict,
+            {"proactive_ok": ok, "epoch": jnp.asarray(trial)})
+        assert np.array_equal(np.asarray(want_t), np.asarray(got_t)), \
+            (kind, trial)
+        assert np.array_equal(np.asarray(want_e), np.asarray(got_e)), \
+            (kind, trial)

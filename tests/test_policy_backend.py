@@ -1,10 +1,30 @@
-"""MIAD policy (invariant 5) + backend behaviour/obliviousness."""
+"""MIAD policy (invariant 5) + the pluggable backend protocol:
+construction-time validation, object-obliviousness at the API boundary,
+behaviour of all six registered backends (incl. the stateful mglru /
+promote), and the deprecated shims."""
+import dataclasses
+import inspect
+
 import jax.numpy as jnp
 import numpy as np
 import pytest
-pytest.importorskip("hypothesis")  # optional dev dep (requirements-dev.txt)
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+try:  # optional dev dep (requirements-dev.txt); only the MIAD property
+    # test needs it — the backend-protocol tests always run
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+    def given(*a, **k):
+        return lambda fn: pytest.mark.skip("hypothesis not installed")(fn)
+
+    def settings(*a, **k):
+        return lambda fn: fn
+
+    class st:  # noqa: N801 - stand-in namespace
+        floats = integers = staticmethod(lambda *a, **k: None)
 
 from repro.core import backend as be
 from repro.core import object_table as ot
@@ -33,71 +53,267 @@ def test_miad_bounds_and_monotonicity(ct, calm, promos, accesses):
         assert int(new_calm) == calm + 1
 
 
-def _stats(n=8, occ=None, ref=None, region=None):
+def _stats(n=8, occ=None, ref=None, region=None, tier=None, evict=None):
     occ = jnp.asarray(occ if occ is not None else [4] * n, jnp.int32)
     ref = jnp.asarray(ref if ref is not None else [False] * n)
     region = jnp.asarray(region if region is not None
                          else [ot.COLD] * n, jnp.int8)
+    tier = jnp.asarray(tier if tier is not None else [pl.HBM] * n,
+                       jnp.int8)
+    evict = jnp.asarray(evict if evict is not None else [pl.NORMAL] * n,
+                        jnp.int8)
     return {"occupancy": occ, "referenced": ref, "region": region,
-            "tier": jnp.zeros(n, jnp.int8),
-            "evict": jnp.zeros(n, jnp.int8)}
+            "tier": tier, "evict": evict}
 
 
 PCFG = pl.make_config(max_objects=64, slot_words=4, sb_slots=8, slack=1.0)
 
 
+def _step(backend, stats, *, bstate=None, ok=False):
+    """One protocol step against the stats' own tier/evict columns."""
+    bstate = backend.init(PCFG) if bstate is None else bstate
+    return backend.step(
+        PCFG, bstate, stats, stats["tier"], stats["evict"],
+        {"proactive_ok": jnp.asarray(ok), "epoch": jnp.asarray(0)})
+
+
+# ---------------------------------------------------------------------------
+# registry / construction-time validation
+# ---------------------------------------------------------------------------
+def test_registry_names_and_unknown_rejected_at_construction():
+    assert set(be.names()) >= {"reactive", "proactive", "cap", "null",
+                               "mglru", "promote"}
+    with pytest.raises(ValueError, match="reactve"):
+        be.make("reactve")                     # the motivating typo
+    with pytest.raises(ValueError, match="registered"):
+        be.BackendConfig(kind="reactve")       # shim validates too
+    with pytest.raises(TypeError):
+        be.make("null", hbm_target_bytes=1)    # unknown param
+
+
 def test_backend_interface_is_object_oblivious():
-    """The backend signature admits ONLY superblock-level inputs — this
-    is the architectural decoupling, checked at the API boundary."""
-    import inspect
-    sig = inspect.signature(be.step)
-    assert set(sig.parameters) == {"cfg", "pool_cfg", "stats", "tier",
-                                   "evict", "proactive_ok"}
+    """The protocol signature admits ONLY page-level inputs (geometry,
+    carried state, superblock stats, tier/evict columns, frontend
+    signals) — the architectural decoupling, checked at the API
+    boundary. No object table, no pool state."""
+    sig = inspect.signature(be.Backend.step)
+    assert set(sig.parameters) == {"self", "geom", "bstate", "stats",
+                                   "tier", "evict", "signals"}
+    for name in be.names():
+        cls = type(be.make(name))
+        assert set(inspect.signature(cls.step).parameters) == \
+            set(sig.parameters), name
+        # hyperparameters are static scalars, never arrays
+        for f in dataclasses.fields(cls):
+            assert f.type in ("int", "bool", "float", "str"), \
+                f"{name}.{f.name} must be a static hyperparameter"
 
 
+def test_telemetry_structure_is_fixed():
+    """Every backend emits the same telemetry pytree (lax.cond branches
+    and backend swaps keep one report structure)."""
+    stats = _stats(PCFG.n_sbs)
+    want = set(be.TELEMETRY_KEYS)
+    for name in be.names():
+        b = be.make(name)
+        _, _, _, telem = _step(b, stats)
+        assert set(telem) == want, name
+
+
+# ---------------------------------------------------------------------------
+# the four ported backends
+# ---------------------------------------------------------------------------
 def test_reactive_prefers_unreferenced():
     n = PCFG.n_sbs
     ref = [i % 2 == 0 for i in range(n)]         # even sbs referenced
     stats = _stats(n, ref=ref)
-    cfg = be.BackendConfig(kind="reactive",
-                           hbm_target_bytes=(n // 2) * PCFG.sb_bytes)
-    tier, evict = be.step(cfg, PCFG, stats, stats["tier"], stats["evict"],
-                          jnp.asarray(False))
+    b = be.make("reactive", hbm_target_bytes=(n // 2) * PCFG.sb_bytes)
+    _, tier, evict, telem = _step(b, stats)
     demoted = np.asarray(tier) == pl.HOST
     # all demoted sbs are unreferenced ones
     assert demoted.sum() == n // 2
     assert not any(demoted[i] and ref[i] for i in range(n))
+    assert int(telem["be_demoted"]) == n // 2
+
+
+def test_reactive_strict_mode_never_evicts_referenced():
+    """evict_referenced=False (the simulator's kswapd): the referenced
+    set is a hard memory ceiling even under unbounded pressure."""
+    n = PCFG.n_sbs
+    stats = _stats(n, ref=[True] * n)
+    strict = be.make("reactive", hbm_target_bytes=0,
+                     evict_referenced=False)
+    _, tier, _, _ = _step(strict, stats)
+    assert (np.asarray(tier) == pl.HBM).all()
+    # while the framework default escalates into the active list
+    loose = be.make("reactive", hbm_target_bytes=0)
+    _, tier, _, _ = _step(loose, stats)
+    assert (np.asarray(tier) == pl.HOST).all()
 
 
 def test_cap_backend_is_hotness_blind():
     n = PCFG.n_sbs
-    ref = [True] * n                              # everything referenced
-    stats = _stats(n, ref=ref)
-    cfg = be.BackendConfig(kind="cap",
-                           hbm_target_bytes=2 * PCFG.sb_bytes)
-    tier, _ = be.step(cfg, PCFG, stats, stats["tier"], stats["evict"],
-                      jnp.asarray(False))
+    stats = _stats(n, ref=[True] * n)             # everything referenced
+    b = be.make("cap", hbm_target_bytes=2 * PCFG.sb_bytes)
+    _, tier, _, _ = _step(b, stats)
     # cap evicts regardless of referenced bits
     assert (np.asarray(tier) == pl.HOST).sum() == n - 2
 
 
 def test_proactive_gated_by_miad():
     n = PCFG.n_sbs
-    stats = _stats(n)
-    evict0 = jnp.full((n,), pl.CANDIDATE, jnp.int8)
-    cfg = be.BackendConfig(kind="proactive")
-    tier, evict = be.step(cfg, PCFG, stats, stats["tier"], evict0,
-                          jnp.asarray(False))
+    stats = _stats(n, evict=[pl.CANDIDATE] * n)
+    b = be.make("proactive")
+    _, tier, evict, _ = _step(b, stats, ok=False)
     assert (np.asarray(tier) == pl.HOST).sum() == 0   # gate closed
-    tier, evict = be.step(cfg, PCFG, stats, stats["tier"], evict0,
-                          jnp.asarray(True))
+    _, tier, evict, _ = _step(b, stats, ok=True)
     assert (np.asarray(tier) == pl.HOST).sum() == n   # gate open
 
 
 def test_null_backend_never_reclaims():
-    stats = _stats(PCFG.n_sbs)
-    cfg = be.BackendConfig(kind="null")
-    tier, evict = be.step(cfg, PCFG, stats, stats["tier"],
-                          jnp.full((PCFG.n_sbs,), pl.CANDIDATE, jnp.int8),
-                          jnp.asarray(True))
+    stats = _stats(PCFG.n_sbs, evict=[pl.CANDIDATE] * PCFG.n_sbs)
+    _, tier, _, _ = _step(be.make("null"), stats, ok=True)
     assert (np.asarray(tier) == pl.HBM).all()
+
+
+# ---------------------------------------------------------------------------
+# the stateful backends
+# ---------------------------------------------------------------------------
+def test_mglru_ages_idle_and_demotes_oldest_first():
+    n = PCFG.n_sbs
+    b = be.make("mglru", hbm_target_bytes=n * PCFG.sb_bytes)  # no pressure
+    ref = [i < n // 2 for i in range(n)]          # first half stays hot
+    stats = _stats(n, ref=ref)
+    bstate = b.init(PCFG)
+    for w in range(5):
+        bstate, tier, evict, _ = _step(b, stats, bstate=bstate)
+    gen = np.asarray(bstate["gen"])
+    assert (gen[:n // 2] == 0).all()              # referenced: youngest
+    assert (gen[n // 2:] == b.max_gen).all()      # idle: saturated old
+    assert (np.asarray(tier) == pl.HBM).all()     # no pressure, no demote
+
+    # now apply pressure for half the pool: victims come from the oldest
+    # generation; the referenced (gen-0) working set is protected
+    pressured = be.make("mglru",
+                        hbm_target_bytes=(n // 2) * PCFG.sb_bytes)
+    bstate2, tier, evict, telem = _step(pressured, stats, bstate=bstate)
+    demoted = np.asarray(tier) == pl.HOST
+    assert demoted.sum() == n // 2
+    assert not demoted[:n // 2].any()
+    assert int(telem["be_demoted"]) == n // 2
+
+
+def test_mglru_protects_young_generations():
+    """min_evict_gen: superblocks referenced within the last window are
+    never demoted even when pressure exceeds the aged population — and
+    min_evict_gen=0 genuinely disables the protection."""
+    n = PCFG.n_sbs
+    b = be.make("mglru", hbm_target_bytes=0)      # unbounded pressure
+    stats = _stats(n, ref=[True] * n)             # everything referenced
+    _, tier, _, _ = _step(b, stats)
+    assert (np.asarray(tier) == pl.HBM).all()
+    unprotected = be.make("mglru", hbm_target_bytes=0, min_evict_gen=0)
+    _, tier, _, _ = _step(unprotected, stats)
+    assert (np.asarray(tier) == pl.HOST).all()
+
+
+def test_promote_watermark_hysteresis():
+    n = PCFG.n_sbs
+    sb = PCFG.sb_bytes
+    b = be.make("promote", hbm_high_bytes=(n // 2) * sb,
+                hbm_low_bytes=(n // 4) * sb, promote_after=2)
+    # phase 1: residency AT the high watermark, hot data stuck on HOST
+    tier = [pl.HBM] * (n // 2) + [pl.HOST] * (n - n // 2)
+    stats = _stats(n, ref=[True] * n, tier=tier,
+                   evict=[pl.NORMAL] * n)
+    bstate = b.init(PCFG)
+    for w in range(3):
+        bstate, out_tier, _, telem = _step(b, stats, bstate=bstate)
+        # at/above high: promotion is off no matter how hot HOST data is
+        assert int(telem["be_promoted"]) == 0
+        assert not bool(bstate["active"])
+    assert (np.asarray(bstate["host_refs"])[n // 2:] >= 2).all()
+
+    # phase 2: residency falls below the LOW watermark -> hysteresis
+    # re-arms and hot HOST superblocks re-tier (streaks >= promote_after
+    # were carried across windows), never past the high watermark
+    tier2 = [pl.HBM] * (n // 8) + [pl.HOST] * (n - n // 8)
+    stats2 = _stats(n, ref=[True] * n, tier=tier2)
+    bstate, out_tier, out_evict, telem = _step(b, stats2, bstate=bstate)
+    promoted = int(telem["be_promoted"])
+    assert promoted > 0
+    n_res = int((np.asarray(out_tier) == pl.HBM).sum())
+    assert n_res <= n // 2                        # never past high
+    # promotion filled residency to the high watermark -> the latch is
+    # OFF again until the next low dip (anti-ping-pong)
+    assert n_res == n // 2 and not bool(bstate["active"])
+
+
+def test_promote_requires_consecutive_referenced_windows():
+    """promote_after=2: one referenced window is not enough, and an idle
+    window resets the streak."""
+    n = PCFG.n_sbs
+    b = be.make("promote", promote_after=2)
+    hot = _stats(n, ref=[True] * n, tier=[pl.HOST] * n)
+    cold = _stats(n, ref=[False] * n, tier=[pl.HOST] * n)
+    bstate = b.init(PCFG)
+    bstate, tier, _, telem = _step(b, hot, bstate=bstate)
+    assert int(telem["be_promoted"]) == 0         # streak = 1
+    bstate, tier, _, telem = _step(b, cold, bstate=bstate)
+    assert int(telem["be_promoted"]) == 0         # streak reset
+    assert (np.asarray(bstate["host_refs"]) == 0).all()
+    bstate, tier, _, telem = _step(b, hot, bstate=bstate)
+    bstate, tier, _, telem = _step(b, hot, bstate=bstate)
+    assert int(telem["be_promoted"]) == n         # 2 consecutive windows
+    assert (np.asarray(tier) == pl.HBM).all()
+
+
+def test_promote_demotes_above_high_watermark():
+    n = PCFG.n_sbs
+    sb = PCFG.sb_bytes
+    b = be.make("promote", hbm_high_bytes=(n // 2) * sb)
+    ref = [i % 2 == 0 for i in range(n)]
+    stats = _stats(n, ref=ref)                    # all resident, over cap
+    _, tier, _, telem = _step(b, stats)
+    demoted = np.asarray(tier) == pl.HOST
+    # low defaults to high: reclaim down to the (collapsed) band
+    assert demoted.sum() == n - n // 2
+    # kswapd priorities: unreferenced go first
+    assert not any(demoted[i] and ref[i] for i in range(n)) or \
+        demoted.sum() > (~np.asarray(ref)).sum()
+
+    # with a real band, reclaim goes PAST the trigger point down to LOW
+    # (kswapd semantics), leaving promotion headroom
+    banded = be.make("promote", hbm_high_bytes=(n // 2) * sb,
+                     hbm_low_bytes=(n // 4) * sb)
+    _, tier, _, _ = _step(banded, stats)
+    assert (np.asarray(tier) == pl.HBM).sum() == n // 4
+
+
+# ---------------------------------------------------------------------------
+# deprecated shims
+# ---------------------------------------------------------------------------
+def test_legacy_step_shim_and_config_build():
+    n = PCFG.n_sbs
+    ref = [i % 3 == 0 for i in range(n)]
+    stats = _stats(n, ref=ref)
+    cfg = be.BackendConfig(kind="reactive",
+                           hbm_target_bytes=3 * PCFG.sb_bytes)
+    tier_a, evict_a = be.step(cfg, PCFG, stats, stats["tier"],
+                              stats["evict"], jnp.asarray(False))
+    b = cfg.build()
+    assert isinstance(b, be.ReactiveBackend)
+    assert b.hbm_target_bytes == 3 * PCFG.sb_bytes
+    _, tier_b, evict_b, _ = _step(b, stats)
+    assert np.array_equal(np.asarray(tier_a), np.asarray(tier_b))
+    assert np.array_equal(np.asarray(evict_a), np.asarray(evict_b))
+    # the shim maps the pressure target onto promote's high watermark
+    assert be.BackendConfig(
+        kind="promote", hbm_target_bytes=128).build().hbm_high_bytes == 128
+    # the one shared target->field mapping (launchers + shim + sim)
+    assert be.pressure_params("cap", 64) == {"hbm_target_bytes": 64}
+    assert be.pressure_params("promote", 64) == {"hbm_high_bytes": 64}
+    assert be.pressure_params("null", 64) == {}      # no pressure field
+    assert be.pressure_params("mglru", 0) == {}      # no target set
+    with pytest.raises(ValueError):
+        be.pressure_params("bogus", 64)
