@@ -53,6 +53,7 @@ def end_load_phase(state):
     load do, so the run starts with a fresh observation window."""
     return dict(state,
                 table=ot.clear_access_and_atc(state["table"]),
+                slot_ref=jnp.zeros_like(state["slot_ref"]),
                 win_accesses=jnp.zeros((), jnp.int32),
                 win_promos=jnp.zeros((), jnp.int32),
                 win_faults=jnp.zeros((), jnp.int32))
@@ -98,7 +99,10 @@ def build_trace(cfg, workload: str, n_windows: int, rng):
 
 def run_windows(engine, state, trace):
     """Window-by-window streaming (the serving shape): one dispatch per
-    window, reports pulled between dispatches."""
+    window, reports pulled between dispatches. The engine DONATES its
+    state input (in-place pool updates), so each run works on a private
+    copy and the caller's `state` stays alive for the next repeat."""
+    state = jax.tree.map(lambda x: x.copy(), state)
     t = int(trace["op"].shape[0])
     dispatches = 0
     reports = []

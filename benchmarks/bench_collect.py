@@ -1,8 +1,11 @@
 """Window-throughput benchmark: fused single-dispatch serving windows
-(engine.run_window) vs. the per-op dispatch path (Hades loop). Emits
-`BENCH_collect.json` via benchmarks.common.emit_json — the perf
-trajectory artifact the acceptance gate reads (fused/unfused window
-speedup on CPU, target >= 3x).
+(engine.run_window) vs. the per-op dispatch path (Hades loop), plus the
+pool-size scaling sweep that proves per-op cost is COMPUTE-PROPORTIONAL
+(O(K) in the batch, independent of pool size — the carried free-list
+allocator + incremental occupancy). Emits `BENCH_collect.json` via
+benchmarks.common.emit_json — the perf trajectory artifact the
+acceptance gate reads (fused/unfused window speedup on CPU, target
+>= 3x; sweep µs/op growth 2048 -> 16384 objects, target <= 2x).
 
     PYTHONPATH=src:. python benchmarks/bench_collect.py [--smoke] [--pallas]
 
@@ -16,6 +19,8 @@ so it is opt-in and excluded from the headline speedup.
 Dispatch accounting is host-side and exact: the per-op path launches one
 compiled program per op (collect fused into the window-closing op); the
 fused path launches ONE program per window regardless of window length.
+The engine donates its state argument (in-place pool updates), so each
+timed run starts from a private copy of the loaded pool.
 """
 from __future__ import annotations
 
@@ -30,6 +35,11 @@ from repro.core import HadesOptions, make_config
 from repro.core import backend as be
 from repro.core import engine as eng
 from repro.core.collector import CollectorConfig
+
+
+def _copy(state):
+    """Private copy of a pool state (the engine donates its input)."""
+    return jax.tree.map(lambda x: x.copy(), state)
 
 
 def build_trace(cfg, rng, n_windows: int, every: int, k: int):
@@ -48,8 +58,41 @@ def build_trace(cfg, rng, n_windows: int, every: int, k: int):
     return eng.make_trace(cfg, steps, k=k), steps
 
 
+def build_churn_trace(cfg, rng, n_windows: int, every: int, k: int):
+    """Scaling-sweep trace: every window mixes reads with an alloc/free
+    churn pair (free K live objects, alloc K fresh ids), so the sweep
+    exercises the allocator fast path — the component that used to cost
+    O(n_slots) per op — not just the access path."""
+    n = cfg.max_objects
+    hot = rng.permutation(n // 2)[:max(n // 8, k)]
+    vals = rng.normal(size=(k, cfg.slot_words)).astype(np.float32)
+    steps = []
+    next_id = n // 2                     # ids n//2.. churn (never loaded)
+    churned = []
+    for t in range(n_windows * every):
+        phase = t % every
+        if phase == every - 2:
+            if churned:
+                steps.append(("free", np.asarray(churned[-1]), None))
+            else:                        # first window: nothing to free yet
+                steps.append(("read", hot[rng.integers(0, len(hot), k)],
+                              None))
+        elif phase == every - 1:
+            ids = np.arange(next_id, next_id + k) % (n // 2) + n // 2
+            next_id += k
+            churned.append(ids)
+            steps.append(("alloc", ids, vals))
+        elif phase % 4 == 3:
+            steps.append(("write", hot[rng.integers(0, len(hot), k)],
+                          vals))
+        else:
+            steps.append(("read", hot[rng.integers(0, len(hot), k)], None))
+    return eng.make_trace(cfg, steps, k=k)
+
+
 def run_per_op(engine, state, steps, every):
     """The unfused path: one dispatch per op (what `Hades` does)."""
+    state = _copy(state)
     dispatches = 0
     for i, (op, ids, values) in enumerate(steps):
         do_collect = (i + 1) % every == 0
@@ -61,6 +104,7 @@ def run_per_op(engine, state, steps, every):
 
 
 def run_fused(engine, state, trace, every):
+    state = _copy(state)
     t = int(trace["op"].shape[0])
     dispatches = 0
     for lo in range(0, t, every):
@@ -82,29 +126,33 @@ def _best_of(fn, repeats: int) -> float:
     return best
 
 
-def main(smoke: bool = False, with_pallas: bool = False):
+def _load(engine, cfg, rng, n_load):
+    vals = rng.normal(size=(n_load, cfg.slot_words)).astype(np.float32)
+    base, _, _ = engine.step(engine.init(), "alloc",
+                             np.arange(n_load), vals)
+    jax.block_until_ready(base["table"])
+    return base
+
+
+def headline(record, rng, smoke: bool, with_pallas: bool):
+    """Fused vs per-op window throughput at the serving scale."""
     n_objects, every, k = 1024, 16, 64
     n_windows = 4 if smoke else 16
     repeats = 2 if smoke else 3
     cfg = make_config(max_objects=n_objects, slot_words=32, sb_slots=64,
                       page_slots=8, slack=1.5)
-    rng = np.random.default_rng(0)
     trace, steps = build_trace(cfg, rng, n_windows, every, k)
 
-    record = {"n_objects": n_objects, "slot_words": cfg.slot_words,
-              "collect_every": every, "ops_per_step": k,
-              "n_windows": n_windows}
+    record.update({"n_objects": n_objects, "slot_words": cfg.slot_words,
+                   "collect_every": every, "ops_per_step": k,
+                   "n_windows": n_windows})
     variants = [(False, "jnp")] + ([(True, "pallas")] if with_pallas else [])
     for use_pallas, tag in variants:
         opts = HadesOptions(collect_every=every,
                             backend=be.make("proactive"),
                             collector=CollectorConfig(use_pallas=use_pallas))
         engine = eng.Engine(cfg, opts)
-        vals = rng.normal(size=(n_objects, cfg.slot_words)).astype(
-            np.float32)
-        base, _, _ = engine.step(engine.init(), "alloc",
-                                 np.arange(n_objects), vals)
-        jax.block_until_ready(base["table"])
+        base = _load(engine, cfg, rng, n_objects)
 
         # warmup (compile both paths), then timed best-of runs
         run_per_op(engine, base, steps[:every], every)
@@ -123,6 +171,58 @@ def main(smoke: bool = False, with_pallas: bool = False):
         record[f"{tag}_fused_dispatches_per_window"] = d_fused / n_windows
         record[f"{tag}_window_speedup"] = unfused_s / fused_s
 
+
+def pool_size_sweep(record, smoke: bool):
+    """Fixed-K sweep over pool size: with the carried free-list allocator
+    and incremental occupancy, fused-window µs/op must stay near-flat as
+    n_objects grows (the once-per-window collector sweep is the only
+    O(n) component, amortized over `every` ops). Asserts the fused-window
+    contract holds at every size: exactly 1 dispatch per window."""
+    every, k = 32, 64
+    sizes = [2048, 4096] if smoke else [2048, 4096, 8192, 16384]
+    n_windows = 2 if smoke else 8
+    repeats = 2 if smoke else 6   # container timers are noisy; min-of-6
+    sweep = []
+    for n_objects in sizes:
+        cfg = make_config(max_objects=n_objects, slot_words=32,
+                          sb_slots=64, page_slots=8, slack=1.5)
+        rng = np.random.default_rng(7)
+        trace = build_churn_trace(cfg, rng, n_windows, every, k)
+        opts = HadesOptions(collect_every=every,
+                            backend=be.make("proactive"),
+                            collector=CollectorConfig())
+        engine = eng.Engine(cfg, opts)
+        base = _load(engine, cfg, rng, n_objects // 2)
+
+        warm = {k2: v[:every] for k2, v in trace.items()}
+        run_fused(engine, base, warm, every)                  # compile
+        _, dispatches = run_fused(engine, base, trace, every)
+        secs = _best_of(lambda: run_fused(engine, base, trace, every),
+                        repeats)
+        n_ops = n_windows * every
+        point = {"n_objects": n_objects,
+                 "fused_us_per_op": secs / n_ops * 1e6,
+                 "fused_us_per_window": secs / n_windows * 1e6,
+                 "dispatches_per_window": dispatches / n_windows}
+        assert point["dispatches_per_window"] == 1.0, \
+            f"n_objects={n_objects}: fused window broke " \
+            f"({point['dispatches_per_window']} dispatches/window)"
+        sweep.append(point)
+        print(f"sweep n_objects={n_objects:6d} "
+              f"{point['fused_us_per_op']:7.1f} us/op "
+              f"{point['dispatches_per_window']:.0f} disp/win")
+    record["sweep_collect_every"] = every
+    record["sweep_ops_per_step"] = k
+    record["sweep"] = sweep
+    record["sweep_us_per_op_growth"] = (
+        sweep[-1]["fused_us_per_op"] / sweep[0]["fused_us_per_op"])
+
+
+def main(smoke: bool = False, with_pallas: bool = False):
+    rng = np.random.default_rng(0)
+    record = {}
+    headline(record, rng, smoke, with_pallas)
+    pool_size_sweep(record, smoke)
     emit_json("collect", record)
     return record
 

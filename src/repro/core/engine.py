@@ -42,8 +42,9 @@ from repro.core import backend as be
 from repro.core import collector as col
 from repro.core import pool as pl
 
-# op codes for batched traces
-READ, WRITE, ALLOC, FREE = 0, 1, 2, 3
+# op codes for batched traces (defined by the pool's unified op)
+READ, WRITE = pl.OP_READ, pl.OP_WRITE
+ALLOC, FREE = pl.OP_ALLOC, pl.OP_FREE
 OP_CODES = {"read": READ, "write": WRITE, "alloc": ALLOC, "free": FREE}
 
 
@@ -246,24 +247,17 @@ def window_program(step_fn, collect_fn, arm_fn, *, every: int,
 # ---------------------------------------------------------------------------
 def _op_step(pool_cfg: pl.PoolConfig, state: Dict, xs: Dict
              ) -> Tuple[Dict, jax.Array]:
-    """Apply one traced op batch (the scan body's op dispatch)."""
-    ids, values = xs["ids"], xs["values"]
+    """Apply one traced op batch (the scan body's op dispatch).
 
-    def b_read(s):
-        vals, s2 = pl.read(pool_cfg, s, ids)
-        return s2, vals.astype(values.dtype)
-
-    def b_write(s):
-        return pl.write(pool_cfg, s, ids, values), jnp.zeros_like(values)
-
-    def b_alloc(s):
-        return pl.alloc(pool_cfg, s, ids, values), jnp.zeros_like(values)
-
-    def b_free(s):
-        return pl.free(pool_cfg, s, ids), jnp.zeros_like(values)
-
-    return jax.lax.switch(xs["op"], [b_read, b_write, b_alloc, b_free],
-                          state)
+    This is `pool.apply_op` with the TRACED op code — one branch-free
+    program per step, not a `lax.switch` over four per-op branches: XLA
+    cannot alias a scan carry in place through a conditional whose
+    branches update different buffers, so a switch silently re-copied
+    the whole heap (`data`) every step, making per-op cost O(n_slots).
+    The mask-parameterized op keeps it O(K)."""
+    state, vals = pl.apply_op(pool_cfg, state, xs["op"], xs["ids"],
+                              xs["values"])
+    return state, vals.astype(xs["values"].dtype)
 
 
 def make_run_window(pool_cfg: pl.PoolConfig, opts: EngineOptions):
@@ -294,8 +288,13 @@ def make_run_window(pool_cfg: pl.PoolConfig, opts: EngineOptions):
         functools.partial(_op_step, pool_cfg), cab, col.arm,
         every=every, enabled=opts.enabled, overlap=opts.overlap_collect)
 
-    jit_generic = jax.jit(run_generic)
-    jit_aligned = jax.jit(run_aligned)
+    # donate the pool state: the window updates it in place instead of
+    # double-buffering the whole pool (notably `data`,
+    # (n_slots+1) x slot_words) on every dispatch. Callers must treat the
+    # state they pass in as CONSUMED — reuse raises a deleted-buffer
+    # error (tests/test_donation.py)
+    jit_generic = jax.jit(run_generic, donate_argnums=(0,))
+    jit_aligned = jax.jit(run_aligned, donate_argnums=(0,))
 
     def run(state, trace, step0=0):
         t = int(trace["op"].shape[0])
@@ -359,13 +358,16 @@ class Engine:
         self.opts = opts or EngineOptions()
         self.backend = be.as_backend(self.opts.backend)
         self._run = make_run_window(pool_cfg, self.opts)
+        # every entry point donates the incoming pool state (in-place
+        # window updates; see make_run_window)
         self._apply = jax.jit(
             functools.partial(apply_step, pool_cfg, self.opts.collector,
                               self.backend),
-            static_argnames=("op", "do_arm", "do_collect"))
+            static_argnames=("op", "do_arm", "do_collect"),
+            donate_argnums=(0,))
         self._collect = jax.jit(functools.partial(
             collect_and_backend, pool_cfg, self.opts.collector,
-            self.backend))
+            self.backend), donate_argnums=(0,))
 
     def init(self) -> Dict:
         """Fresh pool state, with the backend's carried state seeded in
@@ -375,14 +377,19 @@ class Engine:
     # -- fused path ---------------------------------------------------------
     def run_window(self, state: Dict, trace: Dict[str, jax.Array],
                    step0: int = 0):
-        """Execute `trace` (any number of steps/windows) as ONE dispatch."""
+        """Execute `trace` (any number of steps/windows) as ONE dispatch.
+        `state` is DONATED: the pool updates in place and the passed-in
+        pytree must not be used again (keep the returned state)."""
         return self._run(state, trace, step0)
 
     def serve_steps(self, state: Dict, trace: Dict[str, jax.Array],
                     *, step0: int = 0, window: Optional[int] = None):
         """Stream `trace` window-by-window (`window` steps per dispatch,
         default `collect_every`) so reports can be consumed between
-        dispatches. Returns (state, outs [T,K,W], reports list)."""
+        dispatches. Returns (state, outs [T,K,W], reports list). The
+        incoming `state` is donated to the first window's dispatch and
+        each window's output state is donated to the next — the pool is
+        never double-buffered across the stream."""
         t = trace["op"].shape[0]
         window = window or self.opts.collect_every
         outs, reps = [], []

@@ -24,6 +24,13 @@ shim entirely and drive `Engine.run_window` / `serve_steps`, which run
 `collect_every` steps per dispatch. Both paths execute identical
 transitions (tests/test_engine.py asserts bit-parity).
 
+Every engine entry point DONATES the pool state it is handed (in-place
+window updates — docs/allocator.md): this class is the reference for
+the caller contract, reassigning `self.state` from each call's result
+and never touching the previous pytree again. External holders of
+`h.state` must re-read it after any op; a stale reference raises a
+deleted-buffer error rather than silently aliasing old bytes.
+
 Note: `free` advances the window clock like every other op (the engine's
 scan needs a data-independent clock); the pre-engine frontend did not
 tick on free.
@@ -96,6 +103,7 @@ class Hades:
         self.state = dict(
             self.state,
             table=ot.clear_access_and_atc(self.state["table"]),
+            slot_ref=jnp.zeros_like(self.state["slot_ref"]),
             win_accesses=jnp.zeros((), jnp.int32),
             win_promos=jnp.zeros((), jnp.int32),
             win_faults=jnp.zeros((), jnp.int32))

@@ -109,29 +109,28 @@ def is_live(w) -> jax.Array:
 
 def record_access(table: jax.Array, obj_ids: jax.Array,
                   armed: bool | jax.Array = False) -> jax.Array:
-    """Set access bits for obj_ids (scatter-or, idempotent — the paper skips
-    the store when already set; XLA's scatter-or is likewise write-once).
-    When a migration window is `armed`, also bump the saturating ATC —
-    the scope-guard analog. Invalid ids (< 0) are dropped."""
+    """Set access bits for obj_ids (idempotent — the paper skips the
+    store when already set). When a migration window is `armed`, also
+    bump the saturating ATC — the scope-guard analog. Invalid ids (< 0)
+    are dropped (NOT redirected to id 0 with a no-op update: a batch
+    holding both a padding entry and a real access to object 0 would
+    otherwise write conflicting words to index 0).
+
+    Shape of the update: one K-sized scatter into a FRESH boolean hit
+    mask, then an elementwise rewrite of the table. Scattering into the
+    table directly would read-and-write a scan-carried buffer in one
+    step, which defeats XLA's in-place aliasing of the carry (the whole
+    table gets copied every step); the armed branch is folded in as a
+    mask instead of a `lax.cond` for the same reason. Duplicate ids bump
+    the ATC once per batch, exactly like the old scatter-max."""
     n = table.shape[0]
-    valid = obj_ids >= 0
-    safe = jnp.where(valid, obj_ids, 0)      # in-bounds gather index
-    dst = jnp.where(valid, obj_ids, n)       # invalid -> dropped scatter
-    # invalid ids must be DROPPED, not redirected to id 0 with a no-op
-    # update: a batch holding both a padding entry and a real access to
-    # object 0 would otherwise scatter conflicting words to index 0, and
-    # XLA leaves the winner among duplicate writes undefined.
-    word = table[safe] | (ACCESS_MASK << ACCESS_SHIFT)
-    table = table.at[dst].set(word, mode="drop", unique_indices=False)
-    # saturating ATC increment (armed windows only)
-    def bump(t):
-        w = t[safe]
-        atc = atc_of(w)
-        w2 = with_atc(w, jnp.minimum(atc + 1, ATC_SAT))
-        return t.at[dst].max(w2, mode="drop")
-    armed_arr = jnp.asarray(armed)
-    table = jax.lax.cond(armed_arr.astype(bool), bump, lambda t: t, table)
-    return table
+    dst = jnp.where(obj_ids >= 0, obj_ids, n)
+    hit = jnp.zeros((n,), jnp.bool_).at[dst].set(True, mode="drop")
+    word = table | (ACCESS_MASK << ACCESS_SHIFT)
+    bump = hit & jnp.asarray(armed).astype(bool)
+    word = jnp.where(bump, with_atc(word, jnp.minimum(atc_of(word) + 1,
+                                                      ATC_SAT)), word)
+    return jnp.where(hit, word, table)
 
 
 def clear_access_and_atc(table: jax.Array) -> jax.Array:

@@ -29,12 +29,12 @@ signal the MIAD policy keeps below its target.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import freelist as fl
 from repro.core import object_table as ot
 
 # tiers / evict states
@@ -118,12 +118,33 @@ def init(cfg: PoolConfig) -> Dict[str, jax.Array]:
     the scratch row is all-zero at rest. Every masked/dead scatter that
     targets index `n_slots` must therefore write zeros (or copy the
     scratch row onto itself), keeping the jnp oracle and the Pallas mover
-    bit-identical including the scratch bytes."""
+    bit-identical including the scratch bytes.
+
+    Allocator/occupancy state is CARRIED (docs/allocator.md): the
+    per-region free-slot rings (`free_q`/`free_head`/`free_count`,
+    core/freelist.py) make alloc/free O(K) in the batch size, and
+    `sb_occ` tracks per-superblock live-slot counts incrementally
+    (alloc +1 / free -1 / migrate +-1), so the RSS/host gauges and
+    `superblock_stats` read O(n_sbs) counters instead of re-scanning
+    all slots."""
+    free_q, free_head, free_count = fl.seed(cfg)
     return {
         "data": jnp.zeros((cfg.n_slots + 1, cfg.slot_words),
                           jnp.dtype(cfg.dtype)),
         "table": ot.make_table(cfg.max_objects),
         "slot_owner": jnp.full((cfg.n_slots,), -1, jnp.int32),
+        # carried free-slot rings (core/freelist.py): O(K) alloc/free,
+        # restocked dense-first by the collector each window
+        "free_q": free_q,
+        "free_head": free_head,
+        "free_count": free_count,
+        # carried per-superblock live-slot counts (incremental)
+        "sb_occ": jnp.zeros((cfg.n_sbs,), jnp.int32),
+        # carried per-slot referenced bits: set at access time (O(K)),
+        # moved with migrations, zeroed each collect — makes the
+        # backend's per-superblock `referenced` stats an elementwise
+        # reshape instead of an O(n_slots) gather+scatter per window
+        "slot_ref": jnp.zeros((cfg.n_slots,), jnp.bool_),
         "sb_tier": jnp.zeros((cfg.n_sbs,), jnp.int8),
         "sb_evict": jnp.zeros((cfg.n_sbs,), jnp.int8),
         # MIAD-controlled demotion threshold C_t (float for mult. updates)
@@ -149,174 +170,207 @@ def init(cfg: PoolConfig) -> Dict[str, jax.Array]:
 
 
 # ---------------------------------------------------------------------------
-# Allocation — bump into the NEW region's free slots
+# Pool ops — ONE mask-parameterized transition (O(K) per op)
 # ---------------------------------------------------------------------------
-def _take_free_slots(slot_owner: jax.Array, lo: int, hi: int,
-                     k: int) -> Tuple[jax.Array, jax.Array]:
-    """First `k` free slot indices in [lo, hi). Returns (slots [k], ok [k]);
-    slots where ok=False are invalid (region full)."""
-    free = slot_owner[lo:hi] == -1
-    # rank of each free slot among free slots
-    csum = jnp.cumsum(free.astype(jnp.int32))
-    n_free = csum[-1] if free.shape[0] else jnp.zeros((), jnp.int32)
-    # slot_for_rank[r] = index of the r-th free slot
-    ranks = jnp.where(free, csum - 1, hi - lo)
-    slot_for_rank = jnp.full((hi - lo + 1,), -1, jnp.int32) \
-        .at[ranks].set(jnp.arange(hi - lo, dtype=jnp.int32), mode="drop")
-    want = jnp.arange(k, dtype=jnp.int32)
-    ok = want < n_free
-    slots = jnp.where(ok, slot_for_rank[jnp.minimum(want, hi - lo)], 0) + lo
-    return slots, ok
-
-
-def _alloc_order(cfg: PoolConfig) -> jnp.ndarray:
-    """Slot visit order for allocation: NEW region first (fresh objects
-    belong there), spilling into COLD then HOT when NEW is full — a real
-    allocator never fails while the pool has space."""
-    spans = [cfg.region(ot.NEW), cfg.region(ot.COLD), cfg.region(ot.HOT)]
-    return jnp.concatenate([jnp.arange(lo, hi, dtype=jnp.int32)
-                            for lo, hi in spans])
+# op codes (also the engine's batched-trace encoding)
+OP_READ, OP_WRITE, OP_ALLOC, OP_FREE = 0, 1, 2, 3
 
 
 def heap_of_slot(cfg: PoolConfig, slot: jax.Array) -> jax.Array:
     """Region id a physical slot belongs to (static boundaries)."""
-    new_end = cfg.region(ot.NEW)[1]
-    hot_end = cfg.region(ot.HOT)[1]
-    return jnp.where(slot < new_end, ot.NEW,
-                     jnp.where(slot < hot_end, ot.HOT, ot.COLD)
-                     ).astype(jnp.uint32)
+    return fl.region_of_slot(cfg, slot).astype(jnp.uint32)
 
 
-def alloc(cfg: PoolConfig, state: Dict, obj_ids: jax.Array,
-          values: jax.Array) -> Dict:
-    """Allocate `obj_ids` (shape [k], int32) in the NEW heap (spilling to
-    COLD/HOT when full) and write `values` [k, slot_words]. Ids already
-    live are re-written in place (update semantics). Ids < 0 ignored."""
-    k = obj_ids.shape[0]
-    tbl = state["table"]
-    ids_safe = jnp.maximum(obj_ids, 0)
-    words = tbl[ids_safe]
-    live = ot.is_live(words) & (obj_ids >= 0)
-    need = (~live) & (obj_ids >= 0)
+def apply_op(cfg: PoolConfig, state: Dict, op, obj_ids: jax.Array,
+             values: jax.Array) -> Tuple[Dict, jax.Array]:
+    """All four pool ops as ONE op-code-parameterized transition.
+    `op` may be a TRACED scalar (the engine's batched traces) or a python
+    constant (the per-op wrappers below — XLA folds the masks and
+    recovers each op's minimal program). Returns (state, read_vals [k,W];
+    zeros for non-read ops and dead/padding lanes).
 
-    # free slots in allocation order (NEW -> COLD -> HOT)
-    order = _alloc_order(cfg)
-    free = state["slot_owner"][order] == -1
-    csum = jnp.cumsum(free.astype(jnp.int32))
-    n_free = csum[-1]
-    fr = jnp.where(free, csum - 1, cfg.n_slots)
-    slot_for_rank = jnp.zeros((cfg.n_slots + 1,), jnp.int32) \
-        .at[fr].set(order, mode="drop")
-    # rank each needed alloc among needed allocs -> pick that free slot
-    rank = jnp.cumsum(need.astype(jnp.int32)) - 1
-    ok_new = need & (rank < n_free) & (rank >= 0)
-    new_slot = slot_for_rank[jnp.clip(rank, 0, cfg.n_slots)]
+    Why not `lax.switch` over four per-op branches: branches that update
+    different subsets of the state pytree break XLA's in-place aliasing
+    of the surrounding scan carry, which silently re-copies the heap
+    (`data`, O(n_slots)) EVERY step. As a single branch-free program,
+    every update is a K-sized scatter on the same buffers — masked-off
+    lanes route to drop indices — so per-op cost is O(K) in the batch
+    size and independent of pool size (docs/allocator.md).
 
-    # existing objects keep their slot; new ones take the found slot
-    slot = jnp.where(ok_new, new_slot, ot.slot_of(words).astype(jnp.int32))
-    do = live | ok_new
+    Op semantics (ids < 0 are padding everywhere):
+      read   gather payloads; access bit + ATC-when-armed; COLD-hit
+             promotion count; fault-in HOST superblocks
+      write  scatter payloads to live ids (a store is also an access)
+      alloc  claim a slot per dead id — NEW heap first, spilling COLD
+             then HOT off the carried free rings (`freelist.pop`); live
+             ids are re-written in place (update semantics); a
+             duplicated id claims ONE slot (first occurrence wins)
+      free   release live ids: slot pushed on its region's free ring
+             (tail; dense-first order returns at the next restock),
+             occupancy -1; duplicates in one batch free once"""
+    op = jnp.asarray(op, jnp.int32)
+    is_read, is_write = op == OP_READ, op == OP_WRITE
+    is_alloc, is_free = op == OP_ALLOC, op == OP_FREE
 
-    new_words = jnp.where(
-        ok_new, ot.pack(new_slot.astype(jnp.uint32),
-                        heap_of_slot(cfg, new_slot), access=1),
-        # live update: set access bit
-        words | (ot.ACCESS_MASK << ot.ACCESS_SHIFT))
-    tbl = tbl.at[ids_safe].set(jnp.where(do, new_words, tbl[ids_safe]),
-                               mode="drop")
-    owner = state["slot_owner"].at[jnp.where(ok_new, new_slot, cfg.n_slots)] \
-        .set(jnp.where(ok_new, obj_ids, -1), mode="drop")
-    data = state["data"].at[jnp.where(do, slot, cfg.n_slots)].set(
-        jnp.where(do[:, None], values.astype(state["data"].dtype),
-                  0), mode="drop")
-    return dict(state, table=tbl, slot_owner=owner, data=data,
-                win_accesses=state["win_accesses"] + jnp.sum(do))
-
-
-# ---------------------------------------------------------------------------
-# Read / write — every access flows through the table (the "dereference")
-# ---------------------------------------------------------------------------
-def read(cfg: PoolConfig, state: Dict, obj_ids: jax.Array
-         ) -> Tuple[jax.Array, Dict]:
-    """Gather object payloads for `obj_ids` [k] (−1 entries return zeros).
-    This is the paper's pointer dereference: it sets the access bit, bumps
-    the ATC when a migration window is armed, counts COLD-heap promotions,
-    and faults-in any HOST-resident superblock it touches."""
     valid = obj_ids >= 0
     ids = jnp.maximum(obj_ids, 0)
     words = state["table"][ids]
     live = ot.is_live(words) & valid
+    first = fl.first_occurrence(obj_ids)
     slots = ot.slot_of(words).astype(jnp.int32)
-    vals = jnp.where(live[:, None], state["data"][slots], 0)
 
-    tbl = ot.record_access(state["table"], jnp.where(live, obj_ids, -1),
+    # Ordering rule for every carried buffer below: SCATTER BEFORE
+    # GATHER. A gather followed by a scatter on the same scan-carried
+    # array makes XLA's copy-insertion preserve the pre-scatter view by
+    # copying the whole buffer every step (O(n_slots) for `data`);
+    # scatter-then-gather aliases in place. Each op kind uses only one
+    # side (reads never scatter data, allocs/frees never gather it), so
+    # the reordering is semantically free.
+
+    # --- free: push released slots (mask is empty otherwise) ---
+    f_mask = is_free & live & first
+    free_q, free_head, free_count = fl.push(
+        cfg, state["free_q"], state["free_head"], state["free_count"],
+        slots, f_mask)
+
+    # --- alloc: pop fresh slots off the rings (need is empty otherwise;
+    # an op is either alloc or free, so push/pop order is immaterial) ---
+    need = is_alloc & (~live) & valid & first
+    new_slot, ok_new, free_head, free_count = fl.pop(
+        cfg, free_q, free_head, free_count, need)
+    a_do = (is_alloc & live) | ok_new        # lanes an alloc writes
+    a_slot = jnp.where(ok_new, new_slot, slots)
+
+    # --- data: one scatter serves write + alloc (dead/padding lanes
+    # route to the scratch row and must write ZEROS — its invariant) ---
+    d_mask = (is_write & live) | a_do
+    d_slot = jnp.where(is_alloc, a_slot, slots)
+    data = state["data"].at[jnp.where(d_mask, d_slot, cfg.n_slots)].set(
+        jnp.where(d_mask[:, None], values.astype(state["data"].dtype), 0),
+        mode="drop")
+
+    # --- read output: gathered AFTER the (empty-on-read) scatter ---
+    vals = jnp.where((is_read & live)[:, None], data[slots], 0)
+
+    # --- table: dereference access bits (+ATC when armed), alloc words,
+    # free words. The alloc/free rewrites go through fresh K-scattered
+    # mask/value arrays + an elementwise select (same no-gather-then-
+    # scatter rule; record_access does likewise internally) ---
+    rw_live = (is_read | is_write) & live
+    tbl = ot.record_access(state["table"],
+                           jnp.where(rw_live, obj_ids, -1),
                            armed=state["armed"])
+    alloc_words = jnp.where(
+        ok_new, ot.pack(a_slot.astype(jnp.uint32),
+                        heap_of_slot(cfg, a_slot), access=1),
+        # alloc of a live id: in-place update, set the access bit
+        words | (ot.ACCESS_MASK << ot.ACCESS_SHIFT))
+    a_dst = jnp.where(a_do, ids, cfg.max_objects)
+    hit_a = jnp.zeros((cfg.max_objects,), jnp.bool_).at[a_dst].set(
+        True, mode="drop")
+    word_a = jnp.zeros((cfg.max_objects,), jnp.uint32).at[a_dst].set(
+        alloc_words, mode="drop")
+    hit_f = jnp.zeros((cfg.max_objects,), jnp.bool_).at[
+        jnp.where(f_mask, ids, cfg.max_objects)].set(True, mode="drop")
+    tbl = jnp.where(hit_f, ot.free_word(),
+                    jnp.where(hit_a, word_a, tbl))
 
-    # --- fault / promotion accounting ---
+    # --- slot ownership + carried occupancy/referenced ---
+    owner = state["slot_owner"] \
+        .at[jnp.where(ok_new, a_slot, cfg.n_slots)].set(
+            jnp.where(ok_new, obj_ids, -1), mode="drop") \
+        .at[jnp.where(f_mask, slots, cfg.n_slots)].set(-1, mode="drop")
+    sb_occ = state["sb_occ"] \
+        .at[jnp.where(ok_new, a_slot // cfg.sb_slots, cfg.n_sbs)].add(
+            1, mode="drop") \
+        .at[jnp.where(f_mask, slots // cfg.sb_slots, cfg.n_sbs)].add(
+            -1, mode="drop")
+    touch = rw_live | a_do
+    slot_ref = state["slot_ref"] \
+        .at[jnp.where(touch, jnp.where(is_alloc, a_slot, slots),
+                      cfg.n_slots)].set(True, mode="drop") \
+        .at[jnp.where(f_mask, slots, cfg.n_slots)].set(False, mode="drop")
+
+    # --- fault accounting (reads fault HOST superblocks back in) ---
     sbs = slots // cfg.sb_slots
-    on_host = live & (state["sb_tier"][sbs] == HOST)
-    # unique faulted superblocks
+    on_host = is_read & live & (state["sb_tier"][sbs] == HOST)
     fault_mask = jnp.zeros((cfg.n_sbs,), jnp.bool_).at[
         jnp.where(on_host, sbs, cfg.n_sbs)].set(True, mode="drop")
     n_faults = jnp.sum(fault_mask).astype(jnp.int32)
-    # fault-in: promote superblock back to HBM
     sb_tier = jnp.where(fault_mask, HBM, state["sb_tier"]).astype(jnp.int8)
-    sb_evict = jnp.where(fault_mask, NORMAL, state["sb_evict"]).astype(jnp.int8)
+    sb_evict = jnp.where(fault_mask, NORMAL,
+                         state["sb_evict"]).astype(jnp.int8)
 
-    promos = jnp.sum(live & (ot.heap_of(words) == ot.COLD)).astype(jnp.int32)
-    accs = jnp.sum(live).astype(jnp.int32)
-
-    state = dict(state, table=tbl, sb_tier=sb_tier, sb_evict=sb_evict,
+    # --- window counters (free ticks no counters; the op clock lives in
+    # the engine) ---
+    accs = jnp.sum(rw_live) + jnp.sum(a_do)
+    promos = jnp.sum(rw_live & (ot.heap_of(words) == ot.COLD)
+                     ).astype(jnp.int32)
+    state = dict(state, data=data, table=tbl, slot_owner=owner,
+                 free_q=free_q, free_head=free_head,
+                 free_count=free_count, sb_occ=sb_occ, slot_ref=slot_ref,
+                 sb_tier=sb_tier, sb_evict=sb_evict,
                  win_accesses=state["win_accesses"] + accs,
                  win_promos=state["win_promos"] + promos,
                  win_faults=state["win_faults"] + n_faults,
                  total_faults=state["total_faults"] + n_faults)
+    return state, vals
+
+
+def _zero_values(cfg: PoolConfig, obj_ids: jax.Array) -> jax.Array:
+    return jnp.zeros((obj_ids.shape[0], cfg.slot_words),
+                     jnp.dtype(cfg.dtype))
+
+
+def alloc(cfg: PoolConfig, state: Dict, obj_ids: jax.Array,
+          values: jax.Array) -> Dict:
+    """Allocate `obj_ids` [k] (see `apply_op`: NEW->COLD->HOT spill off
+    the carried rings, O(k), first-occurrence-wins on duplicates)."""
+    state, _ = apply_op(cfg, state, OP_ALLOC, obj_ids, values)
+    return state
+
+
+def read(cfg: PoolConfig, state: Dict, obj_ids: jax.Array
+         ) -> Tuple[jax.Array, Dict]:
+    """Gather object payloads for `obj_ids` [k] (−1 entries return zeros).
+    This is the paper's pointer dereference — see `apply_op`."""
+    state, vals = apply_op(cfg, state, OP_READ, obj_ids,
+                           _zero_values(cfg, obj_ids))
     return vals, state
 
 
 def write(cfg: PoolConfig, state: Dict, obj_ids: jax.Array,
           values: jax.Array) -> Dict:
     """Scatter payloads to live objects (a store is also an access)."""
-    valid = obj_ids >= 0
-    ids = jnp.maximum(obj_ids, 0)
-    words = state["table"][ids]
-    live = ot.is_live(words) & valid
-    slots = ot.slot_of(words).astype(jnp.int32)
-    # dead/padding entries are routed to the scratch row (index n_slots)
-    # and must write ZEROS to preserve its all-zero invariant
-    data = state["data"].at[jnp.where(live, slots, cfg.n_slots)].set(
-        jnp.where(live[:, None], values.astype(state["data"].dtype), 0),
-        mode="drop")
-    tbl = ot.record_access(state["table"], jnp.where(live, obj_ids, -1),
-                           armed=state["armed"])
-    promos = jnp.sum(live & (ot.heap_of(words) == ot.COLD)).astype(jnp.int32)
-    return dict(state, data=data, table=tbl,
-                win_accesses=state["win_accesses"] + jnp.sum(live),
-                win_promos=state["win_promos"] + promos)
+    state, _ = apply_op(cfg, state, OP_WRITE, obj_ids, values)
+    return state
 
 
 def free(cfg: PoolConfig, state: Dict, obj_ids: jax.Array) -> Dict:
-    """Release objects (slot returns to its region's free pool)."""
-    valid = obj_ids >= 0
-    ids = jnp.maximum(obj_ids, 0)
-    words = state["table"][ids]
-    live = ot.is_live(words) & valid
-    slots = ot.slot_of(words).astype(jnp.int32)
-    owner = state["slot_owner"].at[jnp.where(live, slots, cfg.n_slots)] \
-        .set(-1, mode="drop")
-    tbl = state["table"].at[jnp.where(live, ids, cfg.max_objects)].set(
-        ot.free_word(), mode="drop")
-    return dict(state, slot_owner=owner, table=tbl)
+    """Release objects (slot returns to its region's free ring) — see
+    `apply_op`."""
+    state, _ = apply_op(cfg, state, OP_FREE, obj_ids,
+                        _zero_values(cfg, obj_ids))
+    return state
 
 
 # ---------------------------------------------------------------------------
 # Superblock summaries (the ONLY view backends get — object-oblivious)
 # ---------------------------------------------------------------------------
 def sb_occupancy(cfg: PoolConfig, state: Dict) -> jax.Array:
-    """Per-superblock live-slot count [n_sbs], from the slot-owner array
-    alone — no object-table gather. The cheap shared input for the
-    RSS/host gauges and the backend path (the referenced bits in
-    `superblock_stats` are the expensive part; occupancy is not)."""
-    live_slot = state["slot_owner"] >= 0
+    """Per-superblock live-slot count [n_sbs] — the CARRIED `sb_occ`
+    counters (alloc +1 / free -1 / migrate +-1), an O(n_sbs) read with no
+    scatter-add over all slots. `recompute_sb_occupancy` is the O(n_slots)
+    oracle (tests assert the carry never drifts)."""
+    return state["sb_occ"]
+
+
+def recompute_sb_occupancy(cfg: PoolConfig,
+                           slot_owner: jax.Array) -> jax.Array:
+    """O(n_slots) occupancy from the slot-owner array — the consistency
+    oracle for the carried counters, and the rebuild used by maintenance
+    passes that rewrite whole regions (`collector.compact_heap`)."""
+    live_slot = slot_owner >= 0
     sb_of_slot = jnp.arange(cfg.n_slots) // cfg.sb_slots
     return jnp.zeros((cfg.n_sbs,), jnp.int32).at[sb_of_slot].add(
         live_slot.astype(jnp.int32))
@@ -325,13 +379,11 @@ def sb_occupancy(cfg: PoolConfig, state: Dict) -> jax.Array:
 def superblock_stats(cfg: PoolConfig, state: Dict) -> Dict[str, jax.Array]:
     """Per-superblock: occupancy, referenced (any access bit within),
     region id, tier, evict state. This is the page-table-level view the
-    paper's unmodified backends consume."""
-    owner = state["slot_owner"]
-    live_slot = owner >= 0
-    sb_of_slot = jnp.arange(cfg.n_slots) // cfg.sb_slots
-    acc_obj = ot.access_of(state["table"]) == 1
-    slot_acc = live_slot & acc_obj[jnp.maximum(owner, 0)]
-    ref = jnp.zeros((cfg.n_sbs,), jnp.bool_).at[sb_of_slot].max(slot_acc)
+    paper's unmodified backends consume. Both expensive columns are
+    carried (occupancy counters + per-slot referenced bits), so the view
+    is O(n_sbs) reads + one elementwise reshape — no per-window
+    gather/scatter over all slots."""
+    ref = state["slot_ref"].reshape(cfg.n_sbs, cfg.sb_slots).any(axis=1)
     return {"occupancy": sb_occupancy(cfg, state), "referenced": ref,
             "region": cfg.sb_region_ids(),
             "tier": state["sb_tier"], "evict": state["sb_evict"]}

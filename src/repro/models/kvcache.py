@@ -70,7 +70,11 @@ def init(cfg: KVCacheConfig,
     """Fresh serving state. Pass the tiering backend so its carried
     state (`pool["bstate"]`) is seeded for the fused collect+backend
     path; omit it only when no backend will run (stateless backends
-    tolerate the default empty carry)."""
+    tolerate the default empty carry). The pool carry also seeds the
+    free-slot rings + occupancy counters (docs/allocator.md), so every
+    `append_layer` allocation inside the decode scan is O(batch), and
+    the server's jitted programs donate the whole carry (the paged pool
+    updates in place across decode windows)."""
     pool = pl.init(cfg.pool_config())
     if backend is not None:
         pool = dict(pool, bstate=backend.init(cfg.pool_config()))
@@ -203,6 +207,8 @@ def _record_touched(pcfg: pl.PoolConfig, pool: Dict, obj_ids: jax.Array
     tbl = ot.record_access(pool["table"], jnp.where(live, obj_ids, -1),
                            armed=pool["armed"])
     slots = ot.slot_of(words).astype(jnp.int32)
+    slot_ref = pool["slot_ref"].at[
+        jnp.where(live, slots, pcfg.n_slots)].set(True, mode="drop")
     sbs = slots // pcfg.sb_slots
     on_host = live & (pool["sb_tier"][sbs] == pl.HOST)
     fault_mask = jnp.zeros((pcfg.n_sbs,), jnp.bool_).at[
@@ -210,7 +216,7 @@ def _record_touched(pcfg: pl.PoolConfig, pool: Dict, obj_ids: jax.Array
     n_faults = jnp.sum(fault_mask).astype(jnp.int32)
     promos = jnp.sum(live & (ot.heap_of(words) == ot.COLD)).astype(jnp.int32)
     return dict(
-        pool, table=tbl,
+        pool, table=tbl, slot_ref=slot_ref,
         sb_tier=jnp.where(fault_mask, pl.HBM, pool["sb_tier"]).astype(jnp.int8),
         sb_evict=jnp.where(fault_mask, pl.NORMAL,
                            pool["sb_evict"]).astype(jnp.int8),

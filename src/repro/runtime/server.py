@@ -169,10 +169,17 @@ class Server:
                 report = eng.zero_report()
             return carry, out, report
 
-        self._win_aligned = jax.jit(aligned)
-        self._win_generic = jax.jit(generic)
+        # the decode carry (KV pool + last tokens) is DONATED: each
+        # window updates the paged pool in place instead of
+        # double-buffering it per dispatch. params (argnum 0) are NOT
+        # donated — they are reused every call. The server never touches
+        # a carry after passing it in (self.state is reassigned from the
+        # returned carry; tests/test_donation.py).
+        self._win_aligned = jax.jit(aligned, donate_argnums=(1,))
+        self._win_generic = jax.jit(generic, donate_argnums=(1,))
         self._step_apply = jax.jit(
-            step_apply, static_argnames=("do_arm", "do_collect"))
+            step_apply, static_argnames=("do_arm", "do_collect"),
+            donate_argnums=(1,))
 
     # -- one decode step across the batch -------------------------------------
     def decode_step(self, params, tokens: jax.Array

@@ -214,13 +214,15 @@ def test_stateful_backends_ride_the_scan_carry(backend):
     state0 = e.init()
     assert jax.tree_util.tree_leaves(state0["bstate"]), \
         "stateful backend must seed a non-empty bstate"
+    # run_window DONATES state0 — snapshot the seeded bstate first
+    bstate0 = jax.tree.map(lambda x: np.asarray(x).copy(), state0["bstate"])
     state, outs, reports = e.run_window(state0, eng.make_trace(CFG, steps),
                                         0)
     _assert_state_equal(h.state, state)
     if "gen" in state["bstate"]:
         # mglru generations always age across windows; promote's state
         # evolution needs crafted stats (covered by the parity suite)
-        moved = not np.array_equal(np.asarray(state0["bstate"]["gen"]),
+        moved = not np.array_equal(bstate0["gen"],
                                    np.asarray(state["bstate"]["gen"]))
         assert moved, "bstate never evolved across windows"
 

@@ -5,14 +5,21 @@
    interleaving of collector passes
 3. epoch safety — objects with ATC > 0 are never moved
 4. heap coherence — table heap field matches the region of its slot
+5. free-list coherence — each region's carried ring holds exactly its
+   free slots (no dup, no leak, no live slot); counts match
+6. occupancy coherence — carried `sb_occ` equals the O(n_slots) oracle
 7. accounting conservation — a superblock is in exactly one tier
 """
 import jax.numpy as jnp
 import numpy as np
 import pytest
-pytest.importorskip("hypothesis")  # optional dev dep (requirements-dev.txt)
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+try:  # optional dev dep (requirements-dev.txt) — only the property test
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:
+    HAS_HYPOTHESIS = False
 
 from repro.core import backend as be
 from repro.core import collector as col
@@ -29,6 +36,35 @@ def fresh_pool(n_alloc=32):
     vals = jnp.arange(n_alloc * 4, dtype=jnp.float32).reshape(n_alloc, 4)
     st_ = pl.alloc(CFG, st_, jnp.arange(n_alloc, dtype=jnp.int32), vals)
     return st_, vals
+
+
+def check_freelist(state, cfg=CFG):
+    """5 + 6: the carried allocator state never drifts from slot_owner."""
+    owner = np.asarray(state["slot_owner"])
+    fq = np.asarray(state["free_q"])
+    fh = np.asarray(state["free_head"])
+    fc = np.asarray(state["free_count"])
+    for r in (ot.NEW, ot.HOT, ot.COLD):
+        lo, hi = cfg.region(r)
+        cap = hi - lo
+        free_slots = set(lo + np.nonzero(owner[lo:hi] == -1)[0])
+        ring = list(fq[lo + (fh[r] + np.arange(fc[r])) % cap])
+        assert fc[r] == len(free_slots), \
+            f"region {r}: count {fc[r]} != {len(free_slots)} free slots"
+        assert len(ring) == len(set(ring)), f"region {r}: ring duplicate"
+        assert set(ring) == free_slots, f"region {r}: ring != free slots"
+    occ = np.asarray(pl.recompute_sb_occupancy(cfg, state["slot_owner"]))
+    assert np.array_equal(np.asarray(state["sb_occ"]), occ), \
+        "carried sb_occ drifted from the slot-owner oracle"
+    # carried per-slot referenced bits mirror the table access bits
+    tbl = np.asarray(state["table"])
+    want_ref = np.zeros((cfg.n_slots,), bool)
+    for s in range(cfg.n_slots):
+        o = owner[s]
+        if o >= 0:
+            want_ref[s] = bool((tbl[o] >> ot.ACCESS_SHIFT) & 1)
+    assert np.array_equal(np.asarray(state["slot_ref"]), want_ref), \
+        "carried slot_ref drifted from the table access bits"
 
 
 def check_invariants(state):
@@ -51,13 +87,11 @@ def check_invariants(state):
     for s in range(CFG.n_slots):
         if owner[s] >= 0:
             assert int(ot.slot_of(state["table"][owner[s]])) == s
+    # 5 + 6. carried free rings + occupancy counters
+    check_freelist(state)
 
 
-@settings(max_examples=25, deadline=None)
-@given(st.lists(st.lists(st.integers(0, 31), min_size=1, max_size=10),
-                min_size=1, max_size=8),
-       st.booleans())
-def test_content_preserved_any_interleaving(windows, arm_last):
+def _content_preserved_any_interleaving(windows, arm_last):
     """Property: after arbitrary access patterns + collector passes (with
     and without armed windows), every object reads back its value."""
     state, vals = fresh_pool(32)
@@ -71,6 +105,22 @@ def test_content_preserved_any_interleaving(windows, arm_last):
         check_invariants(state)
     got, state = pl.read(CFG, state, jnp.arange(32, dtype=jnp.int32))
     assert np.allclose(np.asarray(got), np.asarray(vals))
+
+
+if HAS_HYPOTHESIS:
+    @settings(max_examples=25, deadline=None)
+    @given(st.lists(st.lists(st.integers(0, 31), min_size=1, max_size=10),
+                    min_size=1, max_size=8),
+           st.booleans())
+    def test_content_preserved_any_interleaving(windows, arm_last):
+        _content_preserved_any_interleaving(windows, arm_last)
+else:
+    def test_content_preserved_any_interleaving():
+        """Fallback example when hypothesis is unavailable: a fixed
+        interleaving still exercises the property + invariant checks."""
+        _content_preserved_any_interleaving(
+            [[0, 1, 2, 2, 31], [5], [0, 7, 7, 30, 31, 3], [4]],
+            arm_last=True)
 
 
 def test_epoch_safety_atc_blocks_moves():
@@ -172,3 +222,130 @@ def test_compact_heap_preserves_content():
     owner = np.asarray(state["slot_owner"][lo:hi])
     nz = np.nonzero(owner >= 0)[0]
     assert len(nz) == 0 or nz.max() == len(nz) - 1
+
+
+def _cooked_pool():
+    """A pool whose objects have migrated: 0..11 HOT (kept accessed),
+    12..31 COLD (idle), with several collect windows behind it."""
+    state, vals = fresh_pool(32)
+    for _ in range(6):
+        _, state = pl.read(CFG, state, jnp.arange(12, dtype=jnp.int32))
+        state, _ = col.collect(CFG, CCFG, state)
+    heaps = np.asarray(ot.heap_of(state["table"][:32]))
+    assert (heaps[:12] == ot.HOT).all() and (heaps[12:] == ot.COLD).all()
+    return state, vals
+
+
+@pytest.mark.parametrize("heap", [ot.HOT, ot.COLD])
+def test_compact_heap_interleaved_holes(heap):
+    """Compaction on a migrated HOT/COLD region with interleaved holes:
+    content survives, live slots form a dense prefix, and the free rings
+    + occupancy counters are restocked to match the compacted layout."""
+    state, vals = _cooked_pool()
+    region_objs = list(range(12)) if heap == ot.HOT else list(range(12, 32))
+    holes = region_objs[1::2]                  # every other object
+    state = pl.free(CFG, state, jnp.asarray(holes, jnp.int32))
+    check_invariants(state)
+
+    state = col.compact_heap(CFG, state, heap)
+    check_invariants(state)
+    lo, hi = CFG.region(heap)
+    owner = np.asarray(state["slot_owner"][lo:hi])
+    nz = np.nonzero(owner >= 0)[0]
+    assert len(nz) > 0 and nz.max() == len(nz) - 1, "region not dense"
+    keep = [i for i in region_objs if i not in holes]
+    got, state = pl.read(CFG, state, jnp.asarray(keep, jnp.int32))
+    assert np.allclose(np.asarray(got), np.asarray(vals)[keep])
+    # compaction restocked the ring: the next alloc reuses the freed
+    # region's dense-first holes (via NEW first, which still has space)
+    state = pl.alloc(CFG, state, jnp.asarray(holes, jnp.int32),
+                     jnp.full((len(holes), 4), 5.0, jnp.float32))
+    check_invariants(state)
+
+
+def test_alloc_spill_new_cold_hot_under_freelist():
+    """Alloc spill order under the carried rings: NEW fills first, then
+    COLD, then HOT; every op boundary keeps the rings consistent. Uses a
+    geometry with more ids than slots so every slot is reachable."""
+    cfg = pl.make_config(max_objects=96, slot_words=4, sb_slots=8,
+                         page_slots=4, slack=1.0)
+    state = pl.init(cfg)
+    new_lo, new_hi = cfg.region(ot.NEW)
+    cold_lo, cold_hi = cfg.region(ot.COLD)
+    n_new, n_cold = new_hi - new_lo, cold_hi - cold_lo
+    assert n_new + n_cold + 3 < cfg.max_objects  # ids stay in range
+
+    def fill(state, ids):
+        vals = jnp.ones((len(ids), 4), jnp.float32) * jnp.asarray(
+            ids, jnp.float32)[:, None]
+        return pl.alloc(cfg, state, jnp.asarray(ids, jnp.int32), vals)
+
+    # exactly fill NEW
+    state = fill(state, list(range(n_new)))
+    check_freelist(state, cfg)
+    assert int(state["free_count"][ot.NEW]) == 0
+    heaps = [int(ot.heap_of(state["table"][i])) for i in range(n_new)]
+    assert all(h == ot.NEW for h in heaps)
+
+    # next batch spills into COLD (not HOT)
+    state = fill(state, list(range(n_new, n_new + 4)))
+    check_freelist(state, cfg)
+    for i in range(n_new, n_new + 4):
+        assert int(ot.heap_of(state["table"][i])) == ot.COLD
+
+    # exhaust COLD; the batch STRADDLES the COLD->HOT boundary
+    n_left_cold = n_cold - 4
+    ids = list(range(n_new + 4, n_new + 4 + n_left_cold + 3))
+    state = fill(state, ids)
+    check_freelist(state, cfg)
+    assert int(state["free_count"][ot.COLD]) == 0
+    heaps = [int(ot.heap_of(state["table"][i])) for i in ids]
+    assert all(h == ot.COLD for h in heaps[:n_left_cold])
+    assert all(h == ot.HOT for h in heaps[n_left_cold:])
+
+    # freed NEW slots go back on the NEW ring and are reused before HOT
+    state = pl.free(cfg, state, jnp.asarray([0, 1], jnp.int32))
+    check_freelist(state, cfg)
+    assert int(state["free_count"][ot.NEW]) == 2
+    state = fill(state, [90, 91])
+    check_freelist(state, cfg)
+    assert int(ot.heap_of(state["table"][90])) == ot.NEW
+    assert int(ot.heap_of(state["table"][91])) == ot.NEW
+
+
+def test_alloc_free_duplicates_in_batch():
+    """Duplicated ids in one batch: alloc claims ONE slot (first value
+    wins), free releases once — the rings never double-pop/push."""
+    state = pl.init(CFG)
+    vals = jnp.stack([jnp.full((4,), 1.0), jnp.full((4,), 2.0),
+                      jnp.full((4,), 3.0)]).astype(jnp.float32)
+    state = pl.alloc(CFG, state, jnp.asarray([5, 5, 6], jnp.int32), vals)
+    check_invariants(state)
+    got, state = pl.read(CFG, state, jnp.asarray([5, 6], jnp.int32))
+    assert np.allclose(np.asarray(got)[0], 1.0)   # first occurrence won
+    assert np.allclose(np.asarray(got)[1], 3.0)
+    state = pl.free(CFG, state, jnp.asarray([5, 5, -1, 6], jnp.int32))
+    check_invariants(state)
+    assert int(ot.heap_of(state["table"][5])) == ot.FREE
+
+
+def test_pool_exhaustion_drops_not_corrupts():
+    """More live objects requested than slots: the overflowing allocs
+    fail cleanly (no slot claimed, no ring corruption) and succeed after
+    space is freed."""
+    small = pl.make_config(max_objects=64, slot_words=4, sb_slots=8,
+                           page_slots=4, slack=0.5)   # 32 slots, 64 ids
+    state = pl.init(small)
+    vals = jnp.ones((48, 4), jnp.float32)
+    state = pl.alloc(small, state, jnp.arange(48, dtype=jnp.int32), vals)
+    check_freelist(state, small)
+    live = [i for i in range(48)
+            if int(ot.heap_of(state["table"][i])) != ot.FREE]
+    assert len(live) == small.n_slots          # exactly pool capacity
+    assert int(np.asarray(state["free_count"]).sum()) == 0
+    state = pl.free(small, state, jnp.asarray(live[:4], jnp.int32))
+    state = pl.alloc(small, state, jnp.asarray([60, 61, 62, 63], jnp.int32),
+                     jnp.ones((4, 4), jnp.float32))
+    check_freelist(state, small)
+    for i in (60, 61, 62, 63):
+        assert int(ot.heap_of(state["table"][i])) != ot.FREE
