@@ -19,7 +19,6 @@ Dispatch accounting is host-side and exact (`Server.dispatches`).
 """
 from __future__ import annotations
 
-import os
 import sys
 import time
 
@@ -114,10 +113,10 @@ def main(smoke: bool = False):
     record["overlapped_speedup"] = (record["overlapped_tokens_per_sec"]
                                     / record["per_step_tokens_per_sec"])
     # smoke runs (CI) go to scratch so they never clobber the committed
-    # full-run perf-trajectory artifact
+    # full-run perf-trajectory artifact; merge=True preserves the
+    # continuous-batching row bench_continuous.py contributes
     out_dir = "bench_out" if smoke else "."
-    os.makedirs(out_dir, exist_ok=True)
-    emit_json("serve", record, out_dir=out_dir)
+    emit_json("serve", record, out_dir=out_dir, merge=True)
     return record
 
 

@@ -13,11 +13,13 @@ import sys
 import time
 import traceback
 
-from benchmarks import (bench_embedding, bench_kernels, bench_serving,
+from benchmarks import (bench_embedding, bench_kernels,
                         fig2_page_utilization,
                         fig3_unreclaimable, fig6_crestdb, fig7_backends,
                         roofline_report, table1_structures)
 
+# serving benches live outside this CSV aggregator: bench_serve.py and
+# bench_continuous.py emit the BENCH_serve.json perf-trajectory artifact
 SUITES = [
     ("fig2_page_utilization", fig2_page_utilization.main),
     ("fig3_unreclaimable", fig3_unreclaimable.main),
@@ -25,7 +27,6 @@ SUITES = [
     ("fig7_backends", fig7_backends.main),
     ("table1_structures", table1_structures.main),
     ("bench_kernels", bench_kernels.main),
-    ("bench_serving", bench_serving.main),
     ("bench_embedding", bench_embedding.main),
     ("roofline_report", roofline_report.main),
 ]

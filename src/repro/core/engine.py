@@ -155,7 +155,7 @@ def apply_step(pool_cfg: pl.PoolConfig, col_cfg: col.CollectorConfig,
 # ---------------------------------------------------------------------------
 def window_program(step_fn, collect_fn, arm_fn, *, every: int,
                    enabled: bool = True, overlap: bool = False,
-                   zero_report_fn=zero_report):
+                   zero_report_fn=zero_report, pre_fn=None):
     """Build the two fused-window program shapes over an arbitrary
     per-step transition — the machinery behind `make_run_window`, reused
     by the server's scanned decode windows (runtime/server.py):
@@ -163,6 +163,7 @@ def window_program(step_fn, collect_fn, arm_fn, *, every: int,
         step_fn(state, xs)  -> (state, out_pytree)     one window step
         collect_fn(state)   -> (state, report)         fused collect+backend
         arm_fn(state)       -> state                   ATC arming (epoch)
+        pre_fn(state, exs)  -> state                   window-ENTRY events
 
     Returns (run_generic(state, xs, step0), run_aligned(state, xs)), both
     UNJITTED so callers can close extra operands (e.g. model params) over
@@ -173,12 +174,30 @@ def window_program(step_fn, collect_fn, arm_fn, *, every: int,
     T % every == 0 and step0 % every == 0 and is cond-free (one collect
     per window, statically placed); `run_generic` handles any T/step0
     with a cond-gated collect. Reports come back per-STEP in both shapes
-    (zeros off window closers; `did_collect` marks real ones)."""
+    (zeros off window closers; `did_collect` marks real ones).
+
+    `pre_fn` is the lane-event plumbing for continuous batching
+    (docs/serving.md): when given, both runners take an extra per-step
+    event pytree `exs` (leading axis T, like xs) and apply
+    `pre_fn(state, exs[t])` BEFORE the step at every window-ENTRY clock
+    (step % every == 0) — the serving contract that lane events
+    (free / admit / re-parameterize) resolve at window boundaries,
+    inside the same single dispatch. Event slices at non-entry steps are
+    ignored. The aligned shape applies pre_fn statically at each
+    window's first step; the generic shape gates it on a per-step
+    `lax.cond`, which breaks XLA's in-place carry aliasing on CPU
+    (docs/allocator.md) — it remains the semantics reference; drive
+    event windows through the aligned shape."""
     every = int(every)
 
     # -- generic shape: per-step cond ---------------------------------------
     def step_body(carry, xs):
         state, step = carry
+        if pre_fn is not None:
+            xs, exs = xs
+            state = jax.lax.cond(step % every == 0,
+                                 lambda s: pre_fn(s, exs),
+                                 lambda s: s, state)
         state, out = step_fn(state, xs)
         step = step + 1
         if enabled:
@@ -192,13 +211,18 @@ def window_program(step_fn, collect_fn, arm_fn, *, every: int,
             report = zero_report_fn()
         return (state, step), {"out": out, "report": report}
 
-    def run_generic(state, xs, step0):
+    def run_generic(state, xs, step0, exs=None):
         step0 = jnp.asarray(step0, jnp.int32)
+        if pre_fn is not None:
+            xs = (xs, exs)
         (state, _), ys = jax.lax.scan(step_body, (state, step0), xs)
         return state, ys["out"], ys["report"]
 
     # -- window-aligned shape: cond-free ------------------------------------
     def window_body(state, wxs):
+        if pre_fn is not None:
+            wxs, wexs = wxs
+            state = pre_fn(state, jax.tree.map(lambda v: v[0], wexs))
         if every > 1:
             head = jax.tree.map(lambda v: v[:every - 1], wxs)
             state, outs = jax.lax.scan(step_fn, state, head)
@@ -224,10 +248,16 @@ def window_program(step_fn, collect_fn, arm_fn, *, every: int,
             outs = jax.tree.map(lambda b: b[None], out_last)
         return state, {"out": outs, "report": report}
 
-    def run_aligned(state, xs):
+    def run_aligned(state, xs, exs=None):
         t = jax.tree.leaves(xs)[0].shape[0]
-        wxs = jax.tree.map(
-            lambda v: v.reshape((t // every, every) + v.shape[1:]), xs)
+
+        def to_windows(tree):
+            return jax.tree.map(
+                lambda v: v.reshape((t // every, every) + v.shape[1:]),
+                tree)
+        wxs = to_windows(xs)
+        if pre_fn is not None:
+            wxs = (wxs, to_windows(exs))
         state, ys = jax.lax.scan(window_body, state, wxs)
         outs = jax.tree.map(lambda v: v.reshape((t,) + v.shape[2:]),
                             ys["out"])

@@ -1,6 +1,12 @@
 """Serving launcher: `python -m repro.launch.serve --arch glm4-9b
 --reduced --requests 8` — batched decode with the HADES-managed paged KV
 cache (runtime/server.py), reporting KV RSS + collector activity.
+
+`--mode generate` (default) teacher-forces one fixed batch through
+`Server.generate`; `--mode serve` drives the continuous-batching queue
+(`Server.serve`): more requests than lanes, lane churn at one dispatch
+per window, per-window RSS-vs-live gauges. `--temperature/--top-k`
+switch on in-scan sampling (a PRNG key is derived from --seed).
 """
 from __future__ import annotations
 
@@ -13,17 +19,30 @@ import numpy as np
 from repro.configs import get_config
 from repro.core import backend as be
 from repro.models.model import Model
-from repro.runtime.server import Server, ServerConfig
+from repro.runtime.server import Request, Server, ServerConfig
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--mode", default="generate",
+                    choices=("generate", "serve"),
+                    help="fixed-batch generate or continuous-batching "
+                         "queue serving")
+    ap.add_argument("--requests", type=int, default=4,
+                    help="batch lanes (generate) / queued requests "
+                         "(serve)")
+    ap.add_argument("--lanes", type=int, default=0,
+                    help="serve mode: batch lanes (0 -> min(requests, 4))")
     ap.add_argument("--prompt-len", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=32)
     ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="> 0 samples in-scan (greedy otherwise)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="top-k filter for sampled decode (0 = full "
+                         "vocab)")
     ap.add_argument("--backend", default="proactive", choices=be.names(),
                     help="tiering backend (backend registry)")
     ap.add_argument("--hbm-target-mb", type=int, default=0,
@@ -40,18 +59,42 @@ def main():
     cfg = get_config(args.arch, reduced=args.reduced)
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(args.seed))
+    lanes = args.requests if args.mode == "generate" else \
+        (args.lanes or min(args.requests, 4))
     srv = Server(model, ServerConfig(
-        batch=args.requests, max_len=args.max_len,
+        batch=lanes, max_len=args.max_len,
         block_tokens=max(args.max_len // 16, 4), backend=args.backend,
-        backend_params=be_params))
-
+        backend_params=be_params, temperature=args.temperature,
+        top_k=args.top_k))
     rng = np.random.default_rng(args.seed)
-    prompts = jnp.asarray(
-        rng.integers(0, cfg.vocab_size, (args.requests, args.prompt_len)),
-        jnp.int32)
-    out = srv.generate(params, prompts, max_new=args.max_new)
-    print(f"generated {out.shape} tokens; "
-          f"KV RSS {srv.kv_rss_bytes()/2**20:.2f} MiB")
+    sample_key = jax.random.PRNGKey(args.seed + 1)
+
+    if args.mode == "generate":
+        prompts = jnp.asarray(
+            rng.integers(0, cfg.vocab_size,
+                         (args.requests, args.prompt_len)), jnp.int32)
+        greedy = args.temperature <= 0
+        out = srv.generate(params, prompts, max_new=args.max_new,
+                           greedy=greedy,
+                           key=None if greedy else sample_key)
+        print(f"generated {out.shape} tokens; "
+              f"KV RSS {srv.kv_rss_bytes()/2**20:.2f} MiB")
+    else:
+        reqs = [Request(prompt=rng.integers(0, cfg.vocab_size,
+                                            (args.prompt_len,)).tolist(),
+                        max_new=args.max_new,
+                        temperature=args.temperature, top_k=args.top_k)
+                for _ in range(args.requests)]
+        key = sample_key if args.temperature > 0 else None
+        results = srv.serve(params, reqs, key=key)
+        n_windows = len(srv.serve_log)
+        print(f"served {len(results)} requests on {lanes} lanes in "
+              f"{n_windows} windows ({srv.dispatches} dispatches); "
+              f"{sum(len(r.tokens) for r in results)} tokens")
+        peak = max((e["rss_bytes"] for e in srv.serve_log), default=0.0)
+        print(f"KV RSS peak {peak/2**20:.2f} MiB -> final "
+              f"{srv.kv_rss_bytes()/2**20:.2f} MiB "
+              f"(reclaimed after finishes)")
     for r in srv.reports[-3:]:
         print("  collector:", {k: round(v, 4) for k, v in r.items()})
 

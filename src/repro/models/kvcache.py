@@ -65,8 +65,8 @@ class KVCacheConfig:
             dtype=self.dtype)
 
 
-def init(cfg: KVCacheConfig,
-         backend: Optional[be.Backend] = None) -> Dict:
+def init(cfg: KVCacheConfig, backend: Optional[be.Backend] = None,
+         active: bool = True) -> Dict:
     """Fresh serving state. Pass the tiering backend so its carried
     state (`pool["bstate"]`) is seeded for the fused collect+backend
     path; omit it only when no backend will run (stateless backends
@@ -74,7 +74,14 @@ def init(cfg: KVCacheConfig,
     free-slot rings + occupancy counters (docs/allocator.md), so every
     `append_layer` allocation inside the decode scan is O(batch), and
     the server's jitted programs donate the whole carry (the paged pool
-    updates in place across decode windows)."""
+    updates in place across decode windows).
+
+    Lanes carry a per-lane lifecycle (`active` [B] bool + per-lane
+    `pos`): inactive lanes never append, allocate, or record accesses —
+    their attends run over zero keys and return zeros. `active=False`
+    starts every lane empty for a continuous-batching driver that
+    admits lanes via `admit_lanes` (Server.serve); the default keeps
+    every lane live, the fixed-batch `generate` contract."""
     pool = pl.init(cfg.pool_config())
     if backend is not None:
         pool = dict(pool, bstate=backend.init(cfg.pool_config()))
@@ -84,6 +91,7 @@ def init(cfg: KVCacheConfig,
         "block_tables": jnp.full(
             (cfg.num_layers, cfg.batch, cfg.max_blocks), -1, jnp.int32),
         "pos": jnp.zeros((cfg.batch,), jnp.int32),
+        "active": jnp.full((cfg.batch,), bool(active), jnp.bool_),
     }
 
 
@@ -117,7 +125,9 @@ def append_layer(cfg: KVCacheConfig, state: Dict, layer, k: jax.Array,
     pos = state["pos"]                       # [B]
     blk = pos // cfg.block_tokens
     off = pos % cfg.block_tokens
-    fits = blk < cfg.max_blocks              # [B] capacity guard
+    # capacity guard + lane lifecycle: inactive lanes (no live request
+    # on the lane) neither allocate nor write
+    fits = (blk < cfg.max_blocks) & state["active"]     # [B]
     b_idx = jnp.arange(cfg.batch)
     obj = ((layer * cfg.batch + b_idx) * cfg.max_blocks + blk
            ).astype(jnp.int32)               # [B]
@@ -136,7 +146,8 @@ def append_layer(cfg: KVCacheConfig, state: Dict, layer, k: jax.Array,
     slots = ot.slot_of(words).astype(jnp.int32)         # [B]
     data = pool["data"].reshape(
         -1, 2, cfg.block_tokens, cfg.num_kv_heads, cfg.head_dim)
-    # overflow lanes route out of bounds and are dropped, never clamped
+    # overflow/inactive lanes route out of bounds and are dropped,
+    # never clamped
     slots = jnp.where(fits, slots, data.shape[0])
     kv_tok = jnp.stack([k, v], axis=1)        # [B, 2, KV, D]
     data = data.at[slots, :, off, :, :].set(kv_tok.astype(data.dtype),
@@ -146,8 +157,49 @@ def append_layer(cfg: KVCacheConfig, state: Dict, layer, k: jax.Array,
 
 
 def advance_pos(state: Dict) -> Dict:
-    """One decode step consumed (all layers appended): pos += 1."""
-    return dict(state, pos=state["pos"] + 1)
+    """One decode step consumed (all layers appended): pos += 1 on
+    active lanes; an inactive lane's clock holds at its reset value."""
+    return dict(state, pos=state["pos"] + state["active"].astype(jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# lane lifecycle — continuous batching's finish/refill transitions
+# ---------------------------------------------------------------------------
+def free_lanes(cfg: KVCacheConfig, state: Dict, lanes: jax.Array) -> Dict:
+    """Finish the masked lanes: free ALL their KV objects through the
+    pool op stream. lanes: [B] bool.
+
+    The release is ONE batched `pool.free` over every (layer, block)
+    object id the lane could own — K = layers * batch * max_blocks ids,
+    the O(K) free-ring path (slots push back onto their region's rings,
+    `sb_occ` decrements, `slot_ref`/table words clear); ids the lane
+    never allocated are dead and dropped by the op, so partially-filled
+    lanes free exactly their live blocks. The lane's block-table row
+    resets to -1, its pos to 0, and its active bit clears — the freed
+    cold blocks are now the fragmentation the collector must tidy so
+    the backend can reclaim their superblocks."""
+    pcfg = cfg.pool_config()
+    li = jnp.arange(cfg.num_layers, dtype=jnp.int32)[:, None, None]
+    bi = jnp.arange(cfg.batch, dtype=jnp.int32)[None, :, None]
+    ki = jnp.arange(cfg.max_blocks, dtype=jnp.int32)[None, None, :]
+    obj = (li * cfg.batch + bi) * cfg.max_blocks + ki   # [L, B, MB]
+    ids = jnp.where(lanes[None, :, None], obj, -1).reshape(-1)
+    return dict(state,
+                pool=pl.free(pcfg, state["pool"], ids),
+                block_tables=jnp.where(lanes[None, :, None], -1,
+                                       state["block_tables"]),
+                pos=jnp.where(lanes, 0, state["pos"]),
+                active=state["active"] & ~lanes)
+
+
+def admit_lanes(state: Dict, lanes: jax.Array) -> Dict:
+    """Activate the masked lanes for fresh sequences: pos 0, active set.
+    Admit touches no pool state — any previous occupant must already be
+    freed (`free_lanes`); a lane may be freed and re-admitted in the
+    same window-boundary event."""
+    return dict(state,
+                pos=jnp.where(lanes, 0, state["pos"]),
+                active=state["active"] | lanes)
 
 
 # ---------------------------------------------------------------------------
@@ -177,6 +229,8 @@ def attend(cfg: KVCacheConfig, state: Dict, layer: int, q: jax.Array,
     words = pool["table"][jnp.maximum(tbl, 0)]
     slots = jnp.where(live, ot.slot_of(words).astype(jnp.int32), -1)
     lens = state["pos"] if seq_lens is None else seq_lens
+    # inactive lanes attend over zero keys -> zeros out, nothing touched
+    lens = jnp.where(state["active"], lens, 0)
     if use_pallas is None:
         use_pallas = jax.default_backend() == "tpu"
 
@@ -190,8 +244,13 @@ def attend(cfg: KVCacheConfig, state: Dict, layer: int, q: jax.Array,
         out, touched = kref.paged_attention(
             q, pages[:, 0], pages[:, 1], slots, lens, cfg.block_tokens)
 
+    # inactive lanes really do return ZEROS: with lens == 0 the kernels'
+    # all-masked softmax degenerates to a mean over slot 0's payload (a
+    # live neighbor's KV) — mask it out rather than leak it
+    out = jnp.where(state["active"][:, None, None], out, 0)
     # the kernel's fused access bits -> object-table access bits
-    touched_ids = jnp.where(touched & live, tbl, -1).reshape(-1)
+    touched_ids = jnp.where(touched & live & state["active"][:, None],
+                            tbl, -1).reshape(-1)
     pool = _record_touched(pcfg, pool, touched_ids)
     return out, dict(state, pool=pool)
 

@@ -1,2 +1,3 @@
 from repro.runtime.trainer import Trainer, TrainerConfig  # noqa: F401
-from repro.runtime.server import Server, ServerConfig  # noqa: F401
+from repro.runtime.server import (Completion, Request, Server,  # noqa: F401
+                                  ServerConfig)

@@ -1,0 +1,59 @@
+"""In-scan token sampling for the fused serving windows.
+
+The sampler runs INSIDE the decode scan (runtime/server.py): the PRNG
+key rides the window carry and is split exactly once per model step, and
+the per-lane temperature / top-k parameters are carried DATA (rewritten
+by lane events at window boundaries), so one compiled window program
+serves any mix of greedy and sampled lanes without recompiling or
+syncing to the host mid-window.
+
+Key-carry rules (docs/serving.md):
+
+* Whether sampling runs at all is STATIC per generate/serve call (the
+  server's `do_sample` program variant): all-greedy calls compile the
+  bare argmax transition and never pay the sampler's [B, V] sort +
+  Gumbel draw — nor touch the key.
+* While sampling is enabled: ONE split per model step — teacher-forced
+  steps and greedy (temperature <= 0) lanes consume randomness too. A
+  lane's sample stream is therefore a function of (seed, global step
+  index) only, never of the other lanes' modes or of how the steps were
+  chunked into windows: the per-step and windowed paths stay
+  bit-identical with sampling on.
+* `temperature <= 0` selects greedy argmax for that lane — bit-identical
+  to the pre-sampler serving path (the noise is computed and discarded,
+  which is what keeps the scan branch-free).
+* `top_k <= 0` disables the top-k filter for that lane.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sample(logits: jax.Array, key: jax.Array, temperature: jax.Array,
+           top_k: jax.Array) -> jax.Array:
+    """One sampling step across the batch.
+
+    logits: [B, V]; key: one PRNG key for the step; temperature [B]
+    float32 (<= 0 -> greedy argmax); top_k [B] int32 (<= 0 -> full
+    vocab). Returns tok [B] int32.
+
+    Per-lane top-k with a traced k: the per-lane threshold is the k-th
+    largest logit (one sort over [B, V] — the vocab axis is tiny next to
+    the model step's matmuls), logits below it drop to -inf, and the
+    draw is a Gumbel-max over the kept set — equivalent to renormalized
+    top-k categorical sampling, with no host round trip and no
+    data-dependent shapes inside the scan."""
+    b, v = logits.shape
+    lg = logits.astype(jnp.float32)
+    greedy_tok = jnp.argmax(lg, -1).astype(jnp.int32)
+    srt = jnp.sort(lg, axis=-1)[:, ::-1]                 # descending
+    kth = jnp.take_along_axis(
+        srt, jnp.clip(top_k[:, None] - 1, 0, v - 1), axis=-1)
+    keep = (top_k[:, None] <= 0) | (lg >= kth)
+    noise = jax.random.gumbel(key, (b, v), jnp.float32)
+    scored = jnp.where(keep,
+                       lg / jnp.maximum(temperature, 1e-6)[:, None] + noise,
+                       -jnp.inf)
+    sampled_tok = jnp.argmax(scored, -1).astype(jnp.int32)
+    return jnp.where(temperature > 0, sampled_tok, greedy_tok)

@@ -20,17 +20,27 @@ dereferenced by an in-flight step carry ATC > 0 and are never migrated),
 and `generate` defers each window's report sync until the NEXT window's
 dispatch has been issued — collection resolves while decode runs.
 
-Continuous batching-lite: finished sequences free their KV blocks and
-their lanes are refilled from the pending queue.
+CONTINUOUS BATCHING (`Server.serve`, docs/serving.md): lanes carry a
+lifecycle — admit -> decode -> finish on EOS/max-tokens -> free -> refill
+from the request queue. Lane events resolve at window boundaries and ride
+the window dispatch itself (`engine.window_program`'s `pre_fn` plumbing):
+finishing a lane frees ALL of its KV objects through the pool op stream
+before the window's first step, so churn stays at exactly ONE dispatch
+per window while freed cold blocks become the fragmentation the
+collector tidies for the backend to reclaim. Sampling (temperature /
+top-k, per lane) runs INSIDE the scan under a carried PRNG key
+(runtime/sampling.py).
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import functools
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core import backend as be
@@ -40,6 +50,7 @@ from repro.core import pool as pl
 from repro.models import kvcache as kvc
 from repro.models import layers as L
 from repro.models import transformer as T
+from repro.runtime import sampling
 
 
 @dataclasses.dataclass
@@ -54,15 +65,56 @@ class ServerConfig:
     backend: str = "proactive"
     backend_params: Optional[Dict] = None
     eos_token: int = 2
-    # decode-window length W used by `generate` (0 -> collect_every):
-    # W steps run as ONE dispatch, window protocol included
+    # decode-window length W used by `generate`/`serve` (0 ->
+    # collect_every): W steps run as ONE dispatch, window protocol
+    # included
     window: int = 0
     # double-buffered serving: windows arm the ATC epoch one step before
-    # closing, and `generate` syncs window N's report only after window
-    # N+1's dispatch is in flight
+    # closing, and `generate`/`serve` sync window N's report only after
+    # window N+1's dispatch is in flight
     overlap_collect: bool = False
     # route the collector through the Pallas kernels (interpret on CPU)
     use_pallas: bool = False
+    # in-scan sampling defaults for `generate(greedy=False)`:
+    # temperature <= 0 is greedy argmax, top_k <= 0 keeps the full vocab
+    # (per-request overrides live on `Request`)
+    temperature: float = 1.0
+    top_k: int = 0
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request for `Server.serve` (continuous batching).
+    temperature <= 0 decodes greedily; top_k <= 0 disables the top-k
+    filter. Sampled requests (temperature > 0) need `serve(key=...)`."""
+    prompt: Sequence[int]
+    max_new: int = 32
+    temperature: float = 0.0
+    top_k: int = 0
+
+
+@dataclasses.dataclass
+class Completion:
+    """`Server.serve`'s per-request result. `tokens` are the generated
+    tokens (EOS included when it fired); `finish_reason` is "eos" or
+    "length" (max_new or lane capacity); `windows` is the [admitted,
+    finished] window-index span the request occupied a lane for."""
+    rid: int
+    tokens: List[int]
+    finish_reason: str
+    windows: Tuple[int, int]
+
+
+@dataclasses.dataclass
+class _Lane:
+    """Host-side lane bookkeeping between window boundaries."""
+    rid: int
+    req: Request
+    admitted_at: int
+    steps: int = 0                   # model steps consumed since admit
+    out: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+    reason: str = ""
 
 
 class Server:
@@ -81,19 +133,18 @@ class Server:
             head_dim=mc.resolved_head_dim, dtype=mc.dtype)
         self.col_cfg = col.CollectorConfig(use_pallas=cfg.use_pallas)
         self.backend = be.make(cfg.backend, **(cfg.backend_params or {}))
-        self.state = kvc.init(self.kv_cfg, backend=self.backend)
-        self._steps = 0                     # host mirror of the op clock
-        self._last_tok = jnp.zeros((cfg.batch,), jnp.int32)
         self.reports: List[Dict] = []
-        self.dispatches = 0                 # host-side dispatch count
+        self.serve_log: List[Dict] = []     # per-window churn/RSS gauges
         self._build_programs()
+        self.reset()
 
     # -- compiled programs -----------------------------------------------------
     def _model_step(self, params, state, tok):
         """The fused decode transition: tok [B] -> (state', logits [B,V]).
         Layers run under lax.scan; each layer derives qkv from the CURRENT
         residual stream (exactly once), appends its k/v to the paged pool
-        and attends through the object table."""
+        and attends through the object table. Inactive lanes append
+        nothing and attend over zero keys (kvcache's lane mask)."""
         mc: ModelConfig = self.model.cfg
         cfg = self.kv_cfg
         x = L.embed(params["embed"], tok)[:, None, :]   # [B,1,D]
@@ -130,14 +181,29 @@ class Server:
         cab = functools.partial(kvc.collect_and_backend, self.kv_cfg,
                                 self.col_cfg, self.backend)
 
-        def win_step(params, carry, forced):
+        def win_step(params, do_sample, carry, forced):
             """One window step: forced token (>= 0) or self-feed the
-            previously sampled one; greedy sample for the next step."""
+            previously sampled one (inactive lanes decode a pinned pad
+            token; the lane mask drops their pool traffic). With
+            `do_sample` (static — a property of the generate/serve
+            call) the in-scan sampler picks the next token under the
+            carried PRNG key — split once per step, forced steps
+            included — with the carried per-lane temperature/top-k
+            (temperature <= 0 lanes take argmax); without it the step
+            is the bare argmax transition, so the greedy hot path never
+            pays the sampler's [B, V] sort + Gumbel draw."""
             tok = jnp.where(forced >= 0, forced, carry["tok"])
+            tok = jnp.where(carry["kv"]["active"], tok, 0)
             kvstate, logits = self._model_step(params, carry["kv"], tok)
-            nxt = jnp.argmax(logits, -1).astype(jnp.int32)
-            return (dict(kv=kvstate, tok=nxt),
-                    {"logits": logits, "tok": nxt})
+            if do_sample:
+                key, sub = jax.random.split(carry["key"])
+                nxt = sampling.sample(logits, sub, carry["temp"],
+                                      carry["topk"])
+                carry = dict(carry, kv=kvstate, tok=nxt, key=key)
+            else:
+                nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+                carry = dict(carry, kv=kvstate, tok=nxt)
+            return carry, {"logits": logits, "tok": nxt}
 
         def win_collect(carry):
             kvstate, report = cab(carry["kv"])
@@ -146,21 +212,43 @@ class Server:
         def win_arm(carry):
             return dict(carry, kv=kvc.arm(carry["kv"]))
 
-        def _programs(params):
+        def win_events(carry, ev):
+            """Window-entry lane events, fused into the window dispatch:
+            finished lanes free ALL their KV through the pool op stream,
+            refilled lanes reset their clock and load their sampling
+            params. ev: {"free","admit" [B] bool, "temp" [B] f32,
+            "topk" [B] i32}."""
+            kv = kvc.free_lanes(self.kv_cfg, carry["kv"], ev["free"])
+            kv = kvc.admit_lanes(kv, ev["admit"])
+            return dict(carry, kv=kv,
+                        temp=jnp.where(ev["admit"], ev["temp"],
+                                       carry["temp"]),
+                        topk=jnp.where(ev["admit"], ev["topk"],
+                                       carry["topk"]))
+
+        def _programs(params, do_sample, pre_fn=None):
             return eng.window_program(
-                functools.partial(win_step, params), win_collect, win_arm,
-                every=every, overlap=overlap)
+                functools.partial(win_step, params, do_sample),
+                win_collect, win_arm,
+                every=every, overlap=overlap, pre_fn=pre_fn)
 
-        def aligned(params, carry, toks):
-            return _programs(params)[1](carry, toks)
+        def aligned(params, carry, toks, do_sample):
+            return _programs(params, do_sample)[1](carry, toks)
 
-        def generic(params, carry, toks, step0):
-            return _programs(params)[0](carry, toks, step0)
+        def generic(params, carry, toks, step0, do_sample):
+            return _programs(params, do_sample)[0](carry, toks, step0)
 
-        def step_apply(params, carry, tok, do_arm, do_collect):
+        def serve_aligned(params, carry, toks, events, do_sample):
+            """The continuous-batching window: lane events applied at
+            the window entry, then W steps + collect — one dispatch."""
+            return _programs(params, do_sample,
+                             pre_fn=win_events)[1](carry, toks, events)
+
+        def step_apply(params, carry, tok, do_arm, do_collect,
+                       do_sample):
             """decode_step's program: the identical transition, collect
             and arm fused in statically (the host knows the clock)."""
-            carry, out = win_step(params, carry, tok)
+            carry, out = win_step(params, do_sample, carry, tok)
             if do_arm:
                 carry = win_arm(carry)
             if do_collect:
@@ -169,17 +257,33 @@ class Server:
                 report = eng.zero_report()
             return carry, out, report
 
-        # the decode carry (KV pool + last tokens) is DONATED: each
-        # window updates the paged pool in place instead of
-        # double-buffering it per dispatch. params (argnum 0) are NOT
+        # the decode carry (KV pool + last tokens + sampling key/params)
+        # is DONATED: each window updates the paged pool in place instead
+        # of double-buffering it per dispatch. params (argnum 0) are NOT
         # donated — they are reused every call. The server never touches
-        # a carry after passing it in (self.state is reassigned from the
-        # returned carry; tests/test_donation.py).
-        self._win_aligned = jax.jit(aligned, donate_argnums=(1,))
-        self._win_generic = jax.jit(generic, donate_argnums=(1,))
+        # a carry after passing it in (all carried leaves are reassigned
+        # from the returned carry; tests/test_donation.py). `do_sample`
+        # is static: the greedy variant compiles without the sampler.
+        self._win_aligned = jax.jit(aligned, donate_argnums=(1,),
+                                    static_argnames=("do_sample",))
+        self._win_generic = jax.jit(generic, donate_argnums=(1,),
+                                    static_argnames=("do_sample",))
+        self._win_serve = jax.jit(serve_aligned, donate_argnums=(1,),
+                                  static_argnames=("do_sample",))
         self._step_apply = jax.jit(
-            step_apply, static_argnames=("do_arm", "do_collect"),
+            step_apply,
+            static_argnames=("do_arm", "do_collect", "do_sample"),
             donate_argnums=(1,))
+
+    # -- the decode carry (donated per dispatch, mirrors reassigned) ----------
+    def _carry(self) -> Dict:
+        return {"kv": self.state, "tok": self._last_tok, "key": self._key,
+                "temp": self._temp, "topk": self._topk}
+
+    def _uncarry(self, carry: Dict) -> None:
+        self.state, self._last_tok = carry["kv"], carry["tok"]
+        self._key = carry["key"]
+        self._temp, self._topk = carry["temp"], carry["topk"]
 
     # -- one decode step across the batch -------------------------------------
     def decode_step(self, params, tokens: jax.Array
@@ -193,11 +297,11 @@ class Server:
         do_arm = bool(self.cfg.overlap_collect) and \
             nxt % every == every - 1
         do_collect = nxt % every == 0
-        carry = {"kv": self.state, "tok": self._last_tok}
         carry, out, report = self._step_apply(
-            params, carry, jnp.asarray(tokens, jnp.int32),
-            do_arm=do_arm, do_collect=do_collect)
-        self.state, self._last_tok = carry["kv"], carry["tok"]
+            params, self._carry(), jnp.asarray(tokens, jnp.int32),
+            do_arm=do_arm, do_collect=do_collect,
+            do_sample=self._sample_in_scan)
+        self._uncarry(carry)
         self._steps += 1
         self.dispatches += 1
         if do_collect:
@@ -230,13 +334,15 @@ class Server:
         toks = toks.T                                   # scan axis first
         t = int(toks.shape[0])
         every = self.cfg.collect_every
-        carry = {"kv": self.state, "tok": self._last_tok}
+        carry = self._carry()
         if t > 0 and t % every == 0 and self._steps % every == 0:
-            carry, outs, reports = self._win_aligned(params, carry, toks)
+            carry, outs, reports = self._win_aligned(
+                params, carry, toks, do_sample=self._sample_in_scan)
         else:
-            carry, outs, reports = self._win_generic(params, carry, toks,
-                                                     self._steps)
-        self.state, self._last_tok = carry["kv"], carry["tok"]
+            carry, outs, reports = self._win_generic(
+                params, carry, toks, self._steps,
+                do_sample=self._sample_in_scan)
+        self._uncarry(carry)
         self._steps += t
         self.dispatches += 1
         return (outs["logits"].transpose(1, 0, 2), outs["tok"].T, reports)
@@ -246,14 +352,35 @@ class Server:
                  *, greedy: bool = True, key=None) -> jax.Array:
         """prompts: [B, P], teacher-forced through the same scanned decode
         path (prefill exercises HADES on the prefix blocks), then
-        `max_new` greedy tokens — window-by-window (W = cfg.window or
+        `max_new` tokens — window-by-window (W = cfg.window or
         collect_every), O(tokens / W) dispatches.
+
+        `greedy=True` decodes argmax (bit-identical to the pre-sampler
+        path; `key` is optional and only seeds the carried PRNG).
+        `greedy=False` samples IN-SCAN with cfg.temperature/cfg.top_k on
+        every lane and REQUIRES `key` — sampling without randomness used
+        to fall back to greedy silently; now it refuses. (A
+        cfg.temperature <= 0 still means argmax — that is lane
+        configuration, not a fallback.)
 
         With overlap_collect the loop is double-buffered: window N's
         report sync (the only host<->device round trip) happens only
         after window N+1's dispatch is in flight, so collection resolves
         while the next window decodes."""
+        if not greedy and key is None:
+            raise ValueError(
+                "generate(greedy=False) samples inside the decode scan "
+                "and needs an explicit PRNG `key`")
         b, p = prompts.shape
+        if key is not None:
+            self._key = jnp.asarray(key)
+        self._sample_in_scan = not greedy
+        if greedy:
+            self._temp = jnp.zeros((b,), jnp.float32)
+            self._topk = jnp.zeros((b,), jnp.int32)
+        else:
+            self._temp = jnp.full((b,), self.cfg.temperature, jnp.float32)
+            self._topk = jnp.full((b,), self.cfg.top_k, jnp.int32)
         if max_new <= 0:
             return jnp.zeros((b, 0), jnp.int32)
         total = p + max_new - 1
@@ -277,17 +404,197 @@ class Server:
         out = jnp.concatenate(sampled, axis=1)          # [B, total]
         return out[:, p - 1:]
 
-    def reset(self) -> None:
-        """Fresh serving state (empty pool, zeroed clock/reports) without
-        dropping the compiled programs — shapes are geometry-only, so
-        benchmarks and multi-request drivers restart instantly."""
-        self.state = kvc.init(self.kv_cfg, backend=self.backend)
+    # -- continuous batching ---------------------------------------------------
+    def serve(self, params, requests: Sequence[Request], *, key=None,
+              max_windows: Optional[int] = None) -> List[Completion]:
+        """Continuous-batching queue driver (docs/serving.md).
+
+        Rides the fused serving window at exactly ONE dispatch per
+        window: each iteration resolves lane events on the host (finish
+        -> free, queue -> admit), builds the window's forced-token
+        matrix (prompt tokens teacher-forced per lane, -1 self-feeds,
+        inactive lanes pinned to 0) and dispatches the event+window
+        program — the finished lanes' KV objects are freed through the
+        pool op stream INSIDE that dispatch, before the first step. The
+        sampled tokens sync back at the window boundary (the host must
+        inspect them to schedule lanes — the sync a continuous batcher
+        cannot avoid, paid once per W tokens); with overlap_collect the
+        collect REPORT sync is still deferred one window.
+
+        A lane finishes on EOS, on its request's max_new, or at the
+        lane capacity (cfg.max_len). Prompts must fit a lane
+        (0 < len < max_len — longer ones would silently truncate).
+        Finished lanes keep decoding until their window ends (overshoot
+        tokens are dropped on the host and freed with the lane); the
+        final lanes drain through one last all-inactive window so every
+        request's KV leaves the pool through the same op stream. Starts
+        from a fresh pool (`reset(active=False)`) and ends back in the
+        fixed-batch contract (drained pool, all lanes active at pos 0);
+        per-window RSS/live-bytes/churn gauges land in `self.serve_log`.
+
+        Returns one `Completion` per request, in submission order."""
+        w = self.cfg.window or self.cfg.collect_every
+        every = self.cfg.collect_every
+        if w % every != 0:
+            raise ValueError(
+                f"serve needs window ({w}) aligned to collect_every "
+                f"({every}) — lane events ride the aligned window shape")
+        b = self.cfg.batch
+        do_sample = any(r.temperature > 0 for r in requests)
+        if key is None and do_sample:
+            raise ValueError(
+                "serve() got sampled requests (temperature > 0) but no "
+                "PRNG `key`")
+        for rid, r in enumerate(requests):
+            if not 0 < len(r.prompt) < self.cfg.max_len:
+                raise ValueError(
+                    f"request {rid}: prompt length {len(r.prompt)} must "
+                    f"be in [1, max_len={self.cfg.max_len}) — longer "
+                    "prompts would silently truncate (KV appends past "
+                    "lane capacity are dropped)")
+            if r.max_new < 1:
+                raise ValueError(
+                    f"request {rid}: max_new={r.max_new} — a lane "
+                    "always emits at least one token")
+        self.reset(active=False)
+        self._sample_in_scan = do_sample
+        if key is not None:
+            self._key = jnp.asarray(key)
+        queue = collections.deque(enumerate(requests))
+        lanes: List[Optional[_Lane]] = [None] * b
+        results: List[Optional[Completion]] = [None] * len(requests)
+        if max_windows is None:
+            # generous safety valve: sequential worst case + drain
+            max_windows = 2 + sum(
+                -(-(len(r.prompt) + r.max_new) // w) + 1 for r in requests)
+        window_idx = 0
+        pending = None
+        while True:
+            # -- resolve lane events (host side, window boundary) --------
+            free = np.zeros((b,), bool)
+            admit = np.zeros((b,), bool)
+            temp = np.zeros((b,), np.float32)
+            topk = np.zeros((b,), np.int32)
+            for i in range(b):
+                ln = lanes[i]
+                if ln is not None and ln.done:
+                    free[i] = True
+                    results[ln.rid] = Completion(
+                        ln.rid, ln.out, ln.reason,
+                        (ln.admitted_at, window_idx))
+                    lanes[i] = None
+                if lanes[i] is None and queue:
+                    rid, req = queue.popleft()
+                    lanes[i] = _Lane(rid=rid, req=req,
+                                     admitted_at=window_idx)
+                    admit[i] = True
+                    temp[i] = req.temperature
+                    topk[i] = req.top_k
+            if not any(lanes) and not free.any():
+                break                     # queue drained, pool empty
+            if window_idx >= max_windows:
+                raise RuntimeError(
+                    f"serve exceeded max_windows={max_windows} "
+                    "(lane scheduling stuck?)")
+
+            # -- the window's forced tokens ------------------------------
+            toks = np.zeros((b, w), np.int32)
+            for i, ln in enumerate(lanes):
+                if ln is None:
+                    continue
+                row = np.full((w,), -1, np.int32)
+                prompt = ln.req.prompt
+                n_force = min(max(len(prompt) - ln.steps, 0), w)
+                row[:n_force] = prompt[ln.steps:ln.steps + n_force]
+                toks[i] = row
+
+            # -- ONE dispatch: events + W steps + collect ----------------
+            events = {
+                "free": jnp.zeros((w, b), jnp.bool_).at[0].set(free),
+                "admit": jnp.zeros((w, b), jnp.bool_).at[0].set(admit),
+                "temp": jnp.zeros((w, b), jnp.float32).at[0].set(temp),
+                "topk": jnp.zeros((w, b), jnp.int32).at[0].set(topk),
+            }
+            carry, outs, rep = self._win_serve(
+                params, self._carry(), jnp.asarray(toks.T), events,
+                do_sample=do_sample)
+            self._uncarry(carry)
+            self._steps += w
+            self.dispatches += 1
+            window_idx += 1
+            if self.cfg.overlap_collect:
+                if pending is not None:
+                    self.reports.extend(eng.window_reports(pending))
+                pending = rep
+            else:
+                self.reports.extend(eng.window_reports(rep))
+
+            # -- window-boundary sync: schedule lanes off the samples ----
+            sampled = np.asarray(outs["tok"]).T          # [B, w]
+            for i, ln in enumerate(lanes):
+                if ln is None:
+                    continue
+                p = len(ln.req.prompt)
+                for t in range(w):
+                    if ln.done:
+                        break
+                    s = ln.steps + t
+                    if s < p - 1:
+                        continue                          # prompt phase
+                    ln.out.append(int(sampled[i, t]))
+                    if ln.out[-1] == self.cfg.eos_token:
+                        ln.done, ln.reason = True, "eos"
+                    elif len(ln.out) >= ln.req.max_new:
+                        ln.done, ln.reason = True, "length"
+                    elif s + 1 >= self.cfg.max_len:
+                        ln.done, ln.reason = True, "length"
+                ln.steps += w
+            self.serve_log.append({
+                "window": window_idx,
+                "active": sum(ln is not None for ln in lanes),
+                "admitted": int(admit.sum()), "freed": int(free.sum()),
+                "queued": len(queue),
+                "rss_bytes": self.kv_rss_bytes(),
+                "live_bytes": self.kv_live_bytes(),
+            })
+        if pending is not None:
+            self.reports.extend(eng.window_reports(pending))
+        assert all(r is not None for r in results)
+        # the pool is drained; hand the server back in the fixed-batch
+        # contract (all lanes live at pos 0) so a later generate /
+        # decode_step does not silently decode on masked lanes
+        self.state = dict(self.state,
+                          active=jnp.ones((b,), jnp.bool_))
+        self._sample_in_scan = False
+        return results
+
+    def reset(self, active: bool = True) -> None:
+        """Fresh serving state (empty pool, zeroed clock/reports/sampling
+        carry) without dropping the compiled programs — shapes are
+        geometry-only, so benchmarks and multi-request drivers restart
+        instantly. `active=False` starts every lane empty (the
+        continuous-batching driver admits lanes through window
+        events)."""
+        self.state = kvc.init(self.kv_cfg, backend=self.backend,
+                              active=active)
         self._steps = 0
         self._last_tok = jnp.zeros((self.cfg.batch,), jnp.int32)
+        self._key = jax.random.PRNGKey(0)
+        self._temp = jnp.zeros((self.cfg.batch,), jnp.float32)  # greedy
+        self._topk = jnp.zeros((self.cfg.batch,), jnp.int32)
+        self._sample_in_scan = False        # static program variant
         self.reports = []
-        self.dispatches = 0
+        self.serve_log = []
+        self.dispatches = 0                 # host-side dispatch count
 
     # -- metrics -----------------------------------------------------------------
     def kv_rss_bytes(self) -> float:
         return float(pl.rss_bytes(self.kv_cfg.pool_config(),
                                   self.state["pool"]))
+
+    def kv_live_bytes(self) -> float:
+        """Bytes of LIVE KV objects (allocated blocks x slot bytes) —
+        the floor `kv_rss_bytes` reaches at zero fragmentation; the gap
+        between the two is what the collector + backend reclaim."""
+        n = int(jnp.sum(self.state["block_tables"] >= 0))
+        return float(n * self.kv_cfg.pool_config().slot_bytes)

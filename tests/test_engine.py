@@ -237,3 +237,45 @@ def test_record_access_padding_vs_object_zero():
     assert int(ot.access_of(got[0])) == 1
     # and padding never dirties any other word
     assert np.array_equal(np.asarray(got[1:]), np.asarray(tbl[1:]))
+
+
+def test_window_program_pre_fn_applies_lane_events_at_window_entry():
+    """The pre_fn lane-event plumbing (continuous batching): events
+    apply BEFORE the window-entry step — identically in the aligned and
+    generic shapes, inside the same program — and event slices at
+    non-entry steps are ignored."""
+    import functools
+    opts = _opts()
+    backend = be.as_backend(opts.backend)
+    run_generic, run_aligned = eng.window_program(
+        functools.partial(eng._op_step, CFG),
+        functools.partial(eng.collect_and_backend, CFG, opts.collector,
+                          backend),
+        col.arm, every=4,
+        pre_fn=lambda s, ex: pl.free(CFG, s, ex["free"]))
+
+    n = 16
+    vals = np.arange(n * CFG.slot_words,
+                     dtype=np.float32).reshape(n, CFG.slot_words)
+    steps = [("alloc", np.arange(n), vals)] + \
+        [("read", np.arange(6), None) for _ in range(7)]
+    trace = eng.make_trace(CFG, steps)
+    t = trace["op"].shape[0]
+    # frees at the second window's ENTRY step (4); a free at a NON-entry
+    # step (5) must be ignored by both shapes
+    exs = {"free": jnp.full((t, 2), -1, jnp.int32)
+           .at[4].set(jnp.asarray([14, 15], jnp.int32))
+           .at[5].set(jnp.asarray([0, 1], jnp.int32))}
+
+    def fresh():
+        return dict(pl.init(CFG), bstate=backend.init(CFG))
+
+    s_a, o_a, r_a = run_aligned(fresh(), trace, exs)
+    s_g, o_g, r_g = run_generic(fresh(), trace, 0, exs)
+    _assert_state_equal(s_a, s_g)
+    assert np.array_equal(np.asarray(o_a), np.asarray(o_g))
+    for k in r_a:
+        assert np.array_equal(np.asarray(r_a[k]), np.asarray(r_g[k])), k
+    heaps = np.asarray(ot.heap_of(s_a["table"][:n]))
+    assert (heaps[14:] == ot.FREE).all(), "entry-step frees not applied"
+    assert (heaps[:2] != ot.FREE).all(), "non-entry event was applied"
